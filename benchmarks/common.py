@@ -1,0 +1,60 @@
+"""Shared benchmark scaffolding: instances, timing, CSV output."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import catalog, demand, topology
+from repro.core.objective import Instance
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def out_path(name: str) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    return os.path.join(RESULTS, name)
+
+
+def save_json(name: str, obj) -> None:
+    with open(out_path(name), "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+def csv_line(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line)
+    return line
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def tandem_instance(L: int, sigma: float, h: float, k: int,
+                    h_repo: float, gamma: float = 1.0) -> Instance:
+    """The paper's §6.1 setup: L×L grid, Gaussian demand, tandem network."""
+    cat = catalog.grid(L=L, gamma=gamma)
+    net = topology.tandem(k_leaf=k, k_parent=k, h=h, h_repo=h_repo)
+    dem = demand.gaussian_grid(cat, sigma=sigma)
+    return Instance(net=net, cat=cat, dem=dem)
+
+
+def tandem_both_instance(L: int, h: float, k: int, h_repo: float,
+                         gamma: float = 1.0, sigma: float | None = None,
+                         beta: float = 1.0) -> Instance:
+    """§4.4/Fig 5-6: tandem with arrivals at both leaf and parent."""
+    cat = catalog.grid(L=L, gamma=gamma)
+    net = topology.tandem_both(k_leaf=k, k_parent=k, h=h, h_repo=h_repo)
+    if sigma is None:
+        dem = demand.uniform(cat, n_ingress=2, betas=np.array([1.0, beta]))
+    else:
+        dem = demand.gaussian_grid(cat, sigma=sigma, n_ingress=2,
+                                   betas=np.array([1.0, beta]))
+    return Instance(net=net, cat=cat, dem=dem)

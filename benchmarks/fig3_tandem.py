@@ -1,0 +1,72 @@
+"""Fig. 3: total cost in the leaf-fed tandem vs parent cost h, for
+GREEDY, LOCALSWAP, the continuous approximation (11) and NETDUEL, with a
+wide (σ = L/2) and a narrow (σ = L/8) Gaussian.
+
+Paper claims verified quantitatively (results/bench/fig3.json):
+  * LocalSwap ≤ Greedy ≤ NetDuel (cost ordering);
+  * the continuous approximation tracks LocalSwap more closely for
+    σ = L/2 (λ varies smoothly over cells) than for σ = L/8.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, save_json, tandem_instance, timed
+from repro.core.placement import continuous as cont
+from repro.core.placement import greedy, localswap, netduel
+
+
+def run(L: int = 50, k: int = 50, h_repo: float = 100.0,
+        hs=(0.0, 1.0, 2.0, 4.0, 8.0), ls_iters: int = 8000,
+        nd_iters: int = 60000) -> dict:
+    out: dict = {"L": L, "k": k, "h_repo": h_repo, "curves": {}}
+    for sigma_name, sigma in (("L/2", L / 2), ("L/8", L / 8)):
+        rows = []
+        for h in hs:
+            inst = tandem_instance(L, sigma, h, k, h_repo)
+            g, tg = timed(lambda: greedy(inst))
+            ls, tl = timed(lambda: localswap(inst, n_iters=ls_iters, seed=0))
+            nd, tn = timed(lambda: netduel(inst, n_iters=nd_iters, seed=0,
+                                           window=1500, arm_prob=0.3))
+            spec = cont.ChainSpec(ks=(float(k), float(k)), hs=(0.0, h),
+                                  h_repo=h_repo, gamma=inst.cat.gamma)
+            (_, c_cont, _), tc = timed(
+                lambda: cont.solve_chain_thresholds(inst.lam[0], spec))
+            rows.append({
+                "h": h,
+                "greedy": inst.total_cost(g),
+                "localswap": ls.cost(inst),
+                "netduel": nd.sw.cost(inst),
+                "continuous": c_cont,
+                "t_greedy_s": tg, "t_localswap_s": tl, "t_netduel_s": tn,
+                "t_continuous_s": tc,
+            })
+            csv_line(f"fig3/{sigma_name}/h={h:g}/greedy", tg * 1e6,
+                     f"cost={rows[-1]['greedy']:.4f}")
+            csv_line(f"fig3/{sigma_name}/h={h:g}/localswap", tl * 1e6,
+                     f"cost={rows[-1]['localswap']:.4f}")
+            csv_line(f"fig3/{sigma_name}/h={h:g}/netduel", tn * 1e6,
+                     f"cost={rows[-1]['netduel']:.4f}")
+            csv_line(f"fig3/{sigma_name}/h={h:g}/continuous", tc * 1e6,
+                     f"cost={rows[-1]['continuous']:.4f}")
+        out["curves"][sigma_name] = rows
+    # paper-claim checks
+    checks = {}
+    for sname, rows in out["curves"].items():
+        checks[f"localswap<=greedy ({sname})"] = all(
+            r["localswap"] <= r["greedy"] * 1.02 for r in rows)
+        checks[f"greedy<=netduel ({sname})"] = all(
+            r["greedy"] <= r["netduel"] * 1.10 for r in rows)
+    gap = {s: float(np.mean([abs(r["continuous"] - r["localswap"])
+                             / max(r["localswap"], 1e-9)
+                             for r in out["curves"][s]]))
+           for s in out["curves"]}
+    checks["continuous closer for smooth lambda"] = gap["L/2"] <= gap["L/8"]
+    out["checks"] = checks
+    out["continuous_vs_localswap_relgap"] = gap
+    save_json("fig3.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

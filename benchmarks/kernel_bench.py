@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: correctness-grade
+timings; the derived column reports achieved GB/s and GFLOP/s as a
+plausibility anchor, not TPU performance).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line, save_json
+from repro.kernels.gain import greedy_gain
+from repro.kernels.knn import nearest_approximizer
+
+
+def _bench(fn, *args, repeat=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeat
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    rows = []
+    for (Q, K, D, metric) in [(1024, 4096, 128, "l2"),
+                              (1024, 4096, 2, "l1"),
+                              (4096, 16384, 100, "l2sq")]:
+        q = jnp.asarray(rng.standard_normal((Q, D)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((K, D)).astype(np.float32))
+        dt = _bench(nearest_approximizer, q, k, metric=metric)
+        flops = 2.0 * Q * K * D if metric != "l1" else 3.0 * Q * K * D
+        name = f"knn/Q{Q}_K{K}_D{D}_{metric}"
+        rows.append({"name": name, "us": dt * 1e6,
+                     "gflops": flops / dt / 1e9})
+        csv_line(name, dt * 1e6, f"gflops={flops/dt/1e9:.1f}")
+    for (R, O, D, J) in [(2048, 2048, 128, 3)]:
+        x = jnp.asarray(rng.standard_normal((R, D)).astype(np.float32))
+        y = jnp.asarray(rng.standard_normal((O, D)).astype(np.float32))
+        lam = jnp.asarray(rng.random(R).astype(np.float32))
+        cur = jnp.asarray((rng.random(R) * 4).astype(np.float32))
+        h = jnp.asarray(rng.random((R, J)).astype(np.float32))
+        dt = _bench(greedy_gain, x, y, lam, cur, h, metric="l2")
+        name = f"gain/R{R}_O{O}_D{D}_J{J}"
+        rows.append({"name": name, "us": dt * 1e6})
+        csv_line(name, dt * 1e6, "")
+    save_json("kernels.json", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

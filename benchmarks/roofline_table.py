@@ -1,0 +1,158 @@
+"""Render the §Dry-run / §Roofline tables from results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(tag: str = "") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if len(parts) < 3:
+            continue
+        mesh_part = parts[2]                   # "single" | "multi" [+ _tag]
+        file_tag = mesh_part.split("_", 1)[1] if "_" in mesh_part else ""
+        if file_tag != tag:
+            continue
+        with open(path) as f:
+            rows.append(json.load(f))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9,
+                             r["mesh"]))
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    return f"{x:.3e}"
+
+
+def bottleneck_note(r: dict) -> str:
+    """One sentence per cell: what moves the dominant term down
+    (validated levers from §Perf where available)."""
+    arch, shape = r["arch"], r["shape"]
+    dom = r["roofline"]["dominant"]
+    moe = arch in ("jamba-1.5-large-398b", "dbrx-132b",
+                   "granite-moe-3b-a800m")
+    heads_bad = arch in ("deepseek-coder-33b", "phi3-medium-14b",
+                         "qwen2-vl-7b", "whisper-small")
+    small = arch in ("granite-3-2b", "xlstm-350m", "whisper-small",
+                     "granite-moe-3b-a800m")
+    if shape in ("decode_32k", "long_500k"):
+        if dom == "collective_s":
+            return ("replicate/TP-shard serving weights instead of FSDP "
+                    "(+int8 KV to fit) — validated: →HBM floor")
+        return "already at the weights+KV bandwidth floor"
+    if dom == "compute_s" and moe:
+        return ("gather MoE dispatch removes the one-hot einsum tax "
+                "(validated: jamba 98→58 s compute)")
+    if dom == "collective_s" and heads_bad:
+        return ("seq-attention + Megatron SP replaces the batch "
+                "round-trip (validated: ~15-25x fewer coll bytes)")
+    if dom == "collective_s" and small:
+        if arch == "xlstm-350m":
+            return ("ZeRO-DP with batch spreading — plain SP refuted "
+                    "(recurrent chunk scan crosses seq shards)")
+        return ("16-way TP is over-wide for this d_model: ZeRO-DP+SP "
+                "(validated: granite-moe 357→1.4 s)")
+    if dom == "collective_s":
+        return ("bf16 reduction flows + EP all-to-all dispatch "
+                "(projected ~8x on the EP combine)")
+    if dom == "memory_s":
+        return ("flash/chunked attention removes unfused score traffic "
+                "(next lever)")
+    return "increase per-device arithmetic intensity (larger microbatch)"
+
+
+def markdown_table(rows: list[dict], mesh: str = "single") -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL_FLOPS | useful ratio | roofline % | "
+           "args GiB/dev | note |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"— | — | — | — | SKIP: {r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"— | — | — | — | FAILED |")
+            continue
+        ro = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        args_gib = mem.get("argument_size_in_bytes", 0) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(ro['compute_s'])} | "
+            f"{fmt_s(ro['memory_s'])} | {fmt_s(ro['collective_s'])} | "
+            f"{ro['dominant'].replace('_s', '')} | "
+            f"{ro['model_flops']:.2e} | {ro['useful_flops_ratio']:.2f} | "
+            f"{ro['roofline_fraction'] * 100:.1f} | {args_gib:.2f} | "
+            f"{bottleneck_note(r)} |")
+    return "\n".join(lines)
+
+
+def optimized_rows() -> list[dict]:
+    """All tagged (hillclimbed) cells, any tag."""
+    import glob as g
+    rows = []
+    for path in sorted(g.glob(os.path.join(RESULTS, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if len(parts) < 3 or "_" not in parts[2]:
+            continue
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def run() -> dict:
+    rows = load()
+    ok = [r for r in rows if r["status"] == "ok"]
+    failed = [r for r in rows if r["status"] == "failed"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    print(f"roofline_table,0.0,ok={len(ok)};skip={len(skipped)};"
+          f"failed={len(failed)}")
+    for mesh in ("single", "multi"):
+        path = os.path.join(RESULTS, f"table_{mesh}.md")
+        with open(path, "w") as f:
+            f.write(markdown_table(rows, mesh))
+    opt = optimized_rows()
+    hdr = ("| arch | shape | mesh | tag/policy | compute s | memory s | "
+           "collective s | dominant | roofline % |\n|" + "---|" * 9)
+    lines = [hdr]
+    for r in sorted(opt, key=lambda x: (x["arch"], x["shape"])):
+        if r.get("status") != "ok":
+            continue
+        ro = r["roofline"]
+        pol = r.get("policy", {})
+        tag = ",".join(f"{k}={v}" for k, v in pol.items()
+                       if v not in (None, "tp", True, "einsum", "compute",
+                                    False))
+        args = r.get("memory_analysis", {}).get(
+            "argument_size_in_bytes", 0) / 2 ** 30
+        frac = f"{ro['roofline_fraction']*100:.1f}"
+        if args > 16.0:
+            frac += f" (INVALID: {args:.1f} GiB > HBM)"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {tag} | "
+            f"{fmt_s(ro['compute_s'])} | {fmt_s(ro['memory_s'])} | "
+            f"{fmt_s(ro['collective_s'])} | "
+            f"{ro['dominant'].replace('_s','')} | {frac} |")
+    with open(os.path.join(RESULTS, "table_optimized.md"), "w") as f:
+        f.write("\n".join(lines))
+    if failed:
+        for r in failed:
+            print(f"FAILED CELL: {r['arch']} × {r['shape']} × {r['mesh']}")
+    return {"ok": len(ok), "skipped": len(skipped), "failed": len(failed)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table/figure + kernels +
+roofline. Prints ``name,us_per_call,derived`` CSV lines; JSON artifacts
+land in results/bench/.
+
+  python -m benchmarks.run [--full] [--only fig3,fig4,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (L=100, 10k items; slow)")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig3,fig4,fig56,fig78,kernels,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (fig3_tandem, fig4_allocations,
+                            fig56_both_arrivals, fig78_trace, kernel_bench,
+                            roofline_table)
+
+    t0 = time.time()
+    checks: dict = {}
+
+    def want(name):
+        return only is None or name in only
+
+    if want("fig3"):
+        kw = dict(L=100, k=100, ls_iters=20000, nd_iters=120000) \
+            if args.full else {}
+        checks["fig3"] = fig3_tandem.run(**kw)["checks"]
+    if want("fig4"):
+        kw = dict(L=100, k=100, ls_iters=25000, nd_iters=120000) \
+            if args.full else {}
+        checks["fig4"] = fig4_allocations.run(**kw)["checks"]
+    if want("fig56"):
+        kw = dict(L=60, k=60, ls_iters=25000) if args.full else {}
+        checks["fig56"] = fig56_both_arrivals.run(**kw)["checks"]
+    if want("fig78"):
+        kw = dict(n_items=10000, ls_iters=40000) if args.full else {}
+        checks["fig78"] = fig78_trace.run(**kw)["checks"]
+    if want("kernels"):
+        kernel_bench.run()
+    if want("roofline"):
+        roofline_table.run()
+
+    print(f"\n== paper-claim checks ({time.time()-t0:.0f}s) ==")
+    n_fail = 0
+    for fig, cs in checks.items():
+        for name, ok in cs.items():
+            print(f"  [{'PASS' if ok else 'FAIL'}] {fig}: {name}")
+            n_fail += (not ok)
+    if n_fail:
+        print(f"{n_fail} claim checks FAILED")
+        sys.exit(1)
+    print("all claim checks passed")
+
+
+if __name__ == "__main__":
+    main()

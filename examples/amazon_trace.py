@@ -1,0 +1,23 @@
+"""The §6.2 Amazon-trace experiment on the synthetic stand-in: LOCALSWAP
+in a tandem of embedding caches, unconstrained vs the barycenter-distance
+constrained variant (the paper found the constraint costs only ~1%).
+
+  PYTHONPATH=src python examples/amazon_trace.py
+"""
+from benchmarks.fig78_trace import run
+
+
+def main():
+    out = run(n_items=3000, k=80, ls_iters=10000)
+    u = out["fig7_unconstrained"]
+    c = out["fig7_constrained"]
+    print(f"\nunconstrained LOCALSWAP cost: {u['cost']:.2f}")
+    print(f"constrained (best d* = {c['best_dstar']:.0f}) cost: "
+          f"{c['best_cost']:.2f}  (+{out['constrained_overhead_pct']:.1f}%)")
+    print(f"leaf stores popular-or-central items: "
+          f"{u['frac_leaf_popular_or_central']:.1%}")
+    print("checks:", out["checks"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.ckpt import (latest_step, restore, restore_for_mesh,
+                                   save)
+
+__all__ = ["save", "restore", "restore_for_mesh", "latest_step"]

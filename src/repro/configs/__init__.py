@@ -1,0 +1,1 @@
+"""Per-architecture configs (exact published numbers) + registry."""

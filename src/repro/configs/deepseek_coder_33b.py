@@ -1,0 +1,12 @@
+"""deepseek-coder-33b [dense] — llama-arch (arXiv:2401.14196; hf).
+62L, d_model 7168, 56H (GQA kv=8), d_ff 19200, vocab 32256.
+56 heads do not divide the 16-way model axis: the sharding resolver
+switches attention to batch-sharding (train/prefill) and kv-sequence
+sharding (decode) — see DESIGN.md §4 and launch/sharding.py."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-coder-33b", family="dense",
+    n_layers=62, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=19200, vocab=32256,
+)

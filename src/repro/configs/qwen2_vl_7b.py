@@ -1,0 +1,16 @@
+"""qwen2-vl-7b [vlm] — M-RoPE, dynamic resolution (arXiv:2409.12191; hf).
+28L, d_model 3584, 28H (GQA kv=4), d_ff 18944, vocab 152064, QKV biases.
+
+The vision tower is a STUB: input_specs() provides precomputed patch
+embeddings (B, S_img, 1280) projected by ``vision_proj``; M-RoPE
+position ids (3, B, S) come with the batch. 28 heads are not divisible
+by model=16 → batch/kv-seq attention sharding fallback."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+    d_ff=18944, vocab=152064,
+    mrope=True, mrope_sections=(16, 24, 24), qkv_bias=True,
+    frontend="vision_stub", rope_theta=1e6,
+)

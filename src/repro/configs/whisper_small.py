@@ -1,0 +1,17 @@
+"""whisper-small [audio] — encoder-decoder backbone (arXiv:2212.04356;
+unverified tier). 12L enc + 12L dec, d_model 768, 12H, d_ff 3072 (GELU
+MLP with biases), vocab 51865, tied embeddings.
+
+The conv frontend is a STUB: input_specs() provides precomputed frame
+embeddings (B, S_frames, 128) projected by ``audio_proj``. Deviation
+noted in DESIGN.md: decoder uses RoPE instead of learned positions so
+the decode_32k cell (KV cache of 32768) is well-defined."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small", family="audio",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+    d_ff=3072, vocab=51865,
+    is_encdec=True, n_enc_layers=12, cross_len=1500,
+    tie_embeddings=True, frontend="audio_stub",
+)

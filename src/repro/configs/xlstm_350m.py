@@ -1,0 +1,14 @@
+"""xlstm-350m [ssm] — sLSTM + mLSTM blocks (arXiv:2405.04517; unverified
+tier). 24L, d_model 1024, 4 heads, no FFN (blocks carry their own
+projections), vocab 50304. Pattern: one sLSTM every 8 blocks, rest
+mLSTM with projection factor 2 (chunkwise-parallel training form).
+Recurrent (constant-size state) ⇒ sub-quadratic ⇒ runs long_500k."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m", family="ssm",
+    n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab=50304,
+    xlstm=True, slstm_every=8, ssm_expand=2, xlstm_chunk=128,
+    subquadratic=True,
+)

@@ -1,0 +1,11 @@
+"""Core library: the paper's contribution (similarity-cache placement).
+
+Public API:
+  costs, topology, catalog, demand — problem building blocks
+  objective.Instance               — eqs. (1)-(4)
+  placement.greedy / localswap / netduel / continuous / cascade
+  simcache.SimCacheNetwork         — runtime lookup/forward/serve
+"""
+from repro.core import costs, topology, catalog, demand, objective
+
+__all__ = ["costs", "topology", "catalog", "demand", "objective"]

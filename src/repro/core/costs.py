@@ -1,0 +1,77 @@
+"""Dissimilarity and retrieval cost models (paper §2).
+
+A request r = (o, i) served by approximizer α = (o', j) costs
+
+    C(r, α) = C_a(o, o') + h(i, j)
+
+where ``C_a`` is a non-negative dissimilarity cost and ``h`` the retrieval
+(network) cost. The paper's two instances are both supported:
+
+* **discrete** — ``C_a`` is an |X|×|X| matrix (here: computed from object
+  coordinates on a grid, or given explicitly);
+* **continuous** — objects are points of R^p and ``C_a(x, y) = d(x, y)^γ``
+  for a metric d (norm-1 or norm-2 here, as in the paper).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+METRICS = ("l1", "l2", "l2sq")
+
+
+def pairwise_distance(x: Array, y: Array, metric: str = "l1") -> Array:
+    """Pairwise distances between rows of ``x`` (n, p) and ``y`` (m, p).
+
+    ``l2sq`` is the squared Euclidean distance (cheaper; monotone in l2 so
+    argmins agree — used by lookup paths that only need the argmin).
+    """
+    if metric == "l1":
+        return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+    if metric in ("l2", "l2sq"):
+        # MXU-friendly form: |x|^2 + |y|^2 - 2 x.y  (one matmul).
+        x2 = jnp.sum(x * x, axis=-1)[:, None]
+        y2 = jnp.sum(y * y, axis=-1)[None, :]
+        d2 = x2 + y2 - 2.0 * (x @ y.T)
+        d2 = jnp.maximum(d2, 0.0)
+        return d2 if metric == "l2sq" else jnp.sqrt(d2)
+    raise ValueError(f"unknown metric {metric!r}; expected one of {METRICS}")
+
+
+def approx_cost_from_distance(dist: Array, gamma: float) -> Array:
+    """C_a = f(d) with the paper's power law f(d) = d^γ (γ ≥ 0)."""
+    if gamma == 1.0:
+        return dist
+    return jnp.power(jnp.maximum(dist, 0.0), gamma)
+
+
+def approx_cost(x: Array, y: Array, metric: str = "l1", gamma: float = 1.0) -> Array:
+    """Pairwise approximation-cost matrix C_a(x_r, y_c) = d(x_r, y_c)^γ."""
+    return approx_cost_from_distance(pairwise_distance(x, y, metric), gamma)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "gamma"))
+def _approx_cost_jit(x, y, metric, gamma):
+    return approx_cost(x, y, metric, gamma)
+
+
+def approx_cost_np(x: np.ndarray, y: np.ndarray, metric: str = "l1",
+                   gamma: float = 1.0, block: int = 4096) -> np.ndarray:
+    """Blocked host-side C_a for large catalogs (avoids one giant jit alloc)."""
+    out = np.empty((x.shape[0], y.shape[0]), dtype=np.float32)
+    for s in range(0, x.shape[0], block):
+        xs = jnp.asarray(x[s:s + block], dtype=jnp.float32)
+        out[s:s + block] = np.asarray(
+            _approx_cost_jit(xs, jnp.asarray(y, dtype=jnp.float32), metric, gamma))
+    return out
+
+
+CostFn = Callable[[Array, Array], Array]
+
+INF = np.float32(np.inf)

@@ -1,0 +1,89 @@
+"""Request processes (demand models) over a catalog × ingress nodes.
+
+The paper's request model: request r = (o, i) arrives as a Poisson process
+of rate λ_r. We represent demand as a matrix ``lam`` of shape
+(n_ingress, n_objects), normalized so the aggregate rate is 1 (the paper
+normalizes costs per request).
+
+Demand generators cover the paper's experiments:
+* Gaussian-on-grid (§6.1): λ_o ∝ exp(−d_o² / 2σ²), d_o = hop distance to
+  the grid center.
+* Uniform (§6.1 / Fig 5 right, Fig 6).
+* Zipf popularity over an embedding catalog (the Amazon trace stand-in,
+  §6.2 — popularity rank uncorrelated with distance from barycenter).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.catalog import Catalog
+
+
+@dataclasses.dataclass(frozen=True)
+class Demand:
+    lam: np.ndarray            # (n_ingress, n_objects), sums to 1
+    name: str = "demand"
+
+    @property
+    def n_ingress(self) -> int:
+        return self.lam.shape[0]
+
+    @property
+    def n_objects(self) -> int:
+        return self.lam.shape[1]
+
+    def sample(self, n: int, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+        """Sample n requests → (object_idx, ingress_idx), iid ∝ λ."""
+        p = self.lam.ravel()
+        flat = rng.choice(p.size, size=n, p=p)
+        ing, obj = np.divmod(flat, self.lam.shape[1])
+        return obj.astype(np.int64), ing.astype(np.int64)
+
+
+def _normalize(lam: np.ndarray) -> np.ndarray:
+    return (lam / lam.sum()).astype(np.float64)
+
+
+def gaussian_grid(cat: Catalog, sigma: float, n_ingress: int = 1,
+                  betas: np.ndarray | None = None) -> Demand:
+    """Gaussian demand centered on the grid (paper §6.1).
+
+    λ_o ∝ exp(−d_o²/(2σ²)) with d_o the norm-1 hop distance from the grid
+    center. With multiple ingress nodes the spatial shape is identical up
+    to per-ingress scale factors β_ℓ (the paper's equi-depth-tree
+    assumption, §4.3).
+    """
+    center = cat.coords.mean(axis=0)
+    d = np.abs(cat.coords - center).sum(axis=1)
+    base = np.exp(-d.astype(np.float64) ** 2 / (2.0 * sigma ** 2))
+    betas = np.ones(n_ingress) if betas is None else np.asarray(betas, np.float64)
+    lam = betas[:, None] * base[None, :]
+    return Demand(lam=_normalize(lam), name=f"gauss_s{sigma:g}")
+
+
+def uniform(cat: Catalog, n_ingress: int = 1,
+            betas: np.ndarray | None = None) -> Demand:
+    betas = np.ones(n_ingress) if betas is None else np.asarray(betas, np.float64)
+    lam = np.repeat(betas[:, None], cat.n, axis=1)
+    return Demand(lam=_normalize(lam), name="uniform")
+
+
+def zipf(cat: Catalog, alpha: float = 0.8, n_ingress: int = 1, seed: int = 0,
+         betas: np.ndarray | None = None) -> Demand:
+    """Zipf popularity assigned in a random order (rank ⟂ geometry, §6.2)."""
+    rng = np.random.default_rng(seed)
+    ranks = rng.permutation(cat.n) + 1
+    base = 1.0 / ranks.astype(np.float64) ** alpha
+    betas = np.ones(n_ingress) if betas is None else np.asarray(betas, np.float64)
+    lam = betas[:, None] * base[None, :]
+    return Demand(lam=_normalize(lam), name=f"zipf{alpha:g}")
+
+
+def from_trace(n_objects: int, obj_ids: np.ndarray, ingress_ids: np.ndarray,
+               n_ingress: int = 1) -> Demand:
+    """Empirical demand from a request trace (object id, ingress id)."""
+    lam = np.zeros((n_ingress, n_objects), dtype=np.float64)
+    np.add.at(lam, (ingress_ids, obj_ids), 1.0)
+    return Demand(lam=_normalize(lam), name="trace")

@@ -1,0 +1,162 @@
+"""Problem instance + vectorized evaluation of the paper's objective.
+
+Implements eqs. (1)–(4):
+
+    C(r, A) = min_{α ∈ A ∪ S} C(r, α)          (1)
+    C(A)    = Σ_r λ_r C(r, A)                   (2) discrete case
+    G(A)    = C(∅) − C(A)                       caching gain (§3.1)
+
+An *allocation* is a flat int64 vector ``slots`` of length
+``net.total_slots`` holding object ids (−1 = empty slot); slot ``s``
+belongs to cache ``net.slot_layout()[s]``. This fixed layout makes the
+matroid constraint (Prop 3.2 / Appendix A) trivially satisfied by
+construction and maps 1:1 onto device-resident cache shards.
+
+Requests are the pairs (ingress i, object o) with rate ``dem.lam[i, o]``;
+the request space equals the catalog (O_R = O), as in the paper's
+experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.core.catalog import Catalog
+from repro.core.demand import Demand
+from repro.core.topology import CacheNetwork
+
+INF = np.float32(np.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class Instance:
+    """A similarity-caching placement problem instance (discrete case).
+
+    ``ca_matrix`` optionally supplies an explicit approximation-cost
+    matrix (the paper's first instance, §2); otherwise C_a is derived
+    from catalog coordinates (metric^γ).
+    """
+    net: CacheNetwork
+    cat: Catalog
+    dem: Demand
+    ca_matrix: np.ndarray | None = None
+
+    def __post_init__(self):
+        assert self.dem.n_ingress == self.net.n_ingress
+        assert self.dem.n_objects == self.cat.n
+        if self.ca_matrix is not None:
+            assert self.ca_matrix.shape == (self.cat.n, self.cat.n)
+
+    @functools.cached_property
+    def ca(self) -> np.ndarray:
+        """Full (O, O) approximation-cost matrix (float32, cached)."""
+        return self.cat.ca() if self.ca_matrix is None else self.ca_matrix
+
+    @functools.cached_property
+    def slot_cache(self) -> np.ndarray:
+        return self.net.slot_layout()
+
+    @functools.cached_property
+    def lam(self) -> np.ndarray:
+        return self.dem.lam
+
+    # ---------------------------------------------------------------- eval
+    def slot_costs(self, slots: np.ndarray) -> np.ndarray:
+        """(I, O, K) cost of serving request (i, o) with slot s.
+
+        cost[i, o, s] = C_a[o, slots[s]] + H[i, cache(s)]; +inf for empty
+        slots and off-path caches.
+        """
+        K = slots.shape[0]
+        ca_cols = np.where(slots[None, :] >= 0,
+                           self.ca[:, np.maximum(slots, 0)], INF)   # (O, K)
+        h = self.net.H[:, self.slot_cache]                           # (I, K)
+        return ca_cols[None, :, :] + h[:, None, :]
+
+    def best_two(self, slots: np.ndarray):
+        """Per-request best/second-best over slots ∪ {repository}.
+
+        Returns (best1, arg1, best2): arg1 is the slot index, or −1 when
+        the repository is the best server. best2 likewise includes the
+        repository as a candidate.
+        """
+        c = self.slot_costs(slots)                                   # (I,O,K)
+        if c.shape[2] > 1:
+            part = np.argpartition(c, 1, axis=2)[:, :, :2]           # O(K)
+            vals = np.take_along_axis(c, part, axis=2)
+            first = np.argmin(vals, axis=2, keepdims=True)
+            b1 = np.take_along_axis(vals, first, axis=2)[:, :, 0]
+            b2 = np.take_along_axis(vals, 1 - first, axis=2)[:, :, 0]
+            a1 = np.take_along_axis(part, first, axis=2)[:, :, 0]
+        else:
+            b1, a1 = c[:, :, 0], np.zeros(c.shape[:2], dtype=np.int64)
+            b2 = np.full_like(b1, INF)
+        repo = self.net.h_repo[:, None].astype(np.float32)
+        # fold the repository in as the always-available approximizer S
+        best1 = np.minimum(b1, repo)
+        arg1 = np.where(repo < b1, -1, a1)
+        best2 = np.minimum(np.where(repo < b1, b1, b2), repo)
+        return best1, arg1, best2
+
+    def request_costs(self, slots: np.ndarray) -> np.ndarray:
+        """C(r, A) for every request (I, O) — eq. (1)."""
+        best1, _, _ = self.best_two(slots)
+        return best1
+
+    def total_cost(self, slots: np.ndarray) -> float:
+        """Expected cost C(A) per unit rate — eq. (2)."""
+        return float(np.sum(self.lam * self.request_costs(slots)))
+
+    def empty_cost(self) -> float:
+        """C(∅): every request served by its repository."""
+        return float(np.sum(self.lam * self.net.h_repo[:, None]))
+
+    def caching_gain(self, slots: np.ndarray) -> float:
+        """G(A) = C(∅) − C(A) (§3.1); non-negative, monotone, submodular."""
+        return self.empty_cost() - self.total_cost(slots)
+
+    # ------------------------------------------------------------- greedy
+    def add_gain_single(self, cur: np.ndarray, obj: int, cache: int) -> float:
+        """Marginal gain of adding approximizer (obj, cache) given current
+        per-request costs ``cur`` (I, O):  Σ_r λ_r·relu(cur_r − C(r, α))."""
+        newc = self.ca[:, obj][None, :] + self.net.H[:, cache][:, None]
+        return float(np.sum(self.lam * np.maximum(cur - newc, 0.0)))
+
+    def add_gain_all(self, cur: np.ndarray, block: int = 2048) -> np.ndarray:
+        """(O, J) marginal gain for every candidate approximizer.
+
+        gain[o', j] = Σ_{i,o} λ[i,o]·relu(cur[i,o] − H[i,j] − C_a[o, o']),
+        computed in O-row blocks to bound the (O×O) temporary. This is the
+        reference implementation of the fused Pallas ``gain`` kernel
+        (kernels/gain/ref.py re-exports it in pure jnp).
+        """
+        O, J = self.cat.n, self.net.n_caches
+        gain = np.zeros((O, J), dtype=np.float64)
+        for i in range(self.net.n_ingress):
+            lam_i = self.lam[i]
+            for j in range(J):
+                h = self.net.H[i, j]
+                if not np.isfinite(h):
+                    continue
+                a = cur[i] - h                                    # (O,)
+                for s in range(0, O, block):
+                    blk = slice(s, s + block)
+                    m = np.maximum(a[blk, None] - self.ca[blk, :], 0.0)
+                    gain[:, j] += lam_i[blk] @ m
+        return gain
+
+    def updated_costs(self, cur: np.ndarray, obj: int, cache: int) -> np.ndarray:
+        """cur after adding (obj, cache): min(cur, C_a[:,obj] + H[:,cache])."""
+        newc = self.ca[:, obj][None, :] + self.net.H[:, cache][:, None]
+        return np.minimum(cur, newc)
+
+
+def random_slots(inst: Instance, rng: np.random.Generator) -> np.ndarray:
+    """Random initial allocation (LocalSwap/NetDuel start state, §3.3)."""
+    return rng.integers(0, inst.cat.n, size=inst.net.total_slots, dtype=np.int64)
+
+
+def empty_slots(inst: Instance) -> np.ndarray:
+    return np.full(inst.net.total_slots, -1, dtype=np.int64)

@@ -1,0 +1,10 @@
+from repro.core.placement.greedy import greedy
+from repro.core.placement.localswap import localswap, localswap_polish
+from repro.core.placement.netduel import netduel
+from repro.core.placement.cascade import greedy_then_localswap
+from repro.core.placement import continuous
+
+__all__ = [
+    "greedy", "localswap", "localswap_polish", "netduel",
+    "greedy_then_localswap", "continuous",
+]

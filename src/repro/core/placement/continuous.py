@@ -1,0 +1,342 @@
+"""Continuous-limit placement (paper §4).
+
+Implements, faithfully:
+
+* ζ(γ) and the single-cache optimum, eqs. (5)–(8)   → :func:`zeta`,
+  :func:`single_cache_cost`, :func:`single_cache_allocation`;
+* the chain-topology convex program (11)             → :func:`chain_cost`,
+  :func:`solve_chain` (mirror descent / exponentiated gradient in JAX) and
+  :func:`solve_chain_thresholds` (exploits the Prop 4.2 threshold
+  structure: cache j serves a contiguous popularity band);
+* equi-depth trees, Prop 4.4                         → :func:`tree_cost`
+  (replicate the chain solution; cost is degree-1 homogeneous in λ);
+* the tandem network with arrivals at both nodes, eqs. (14)–(15)
+  → :func:`tandem_both_cost`, :func:`solve_tandem_both`,
+  :func:`tandem_both_grad` (hand-coded (15), used to cross-check
+  autodiff);
+* the uniform-λ shifted-tessellation geometry of Fig. 2:
+  z = max{0, (r−h)/2}, Δc = (8/3)·z³ for γ=1         → closed form
+  :func:`shifted_tessellation_cost` plus a general-γ numerical
+  integration :func:`shifted_tessellation_cost_numeric` (validates the
+  closed form and extends Fig. 6 beyond γ=1).
+
+Conventions: M regions of unit area with piecewise-constant rates
+``lams`` (the paper's discretization); caches 1..N have sizes ``ks`` and
+cumulative reach costs ``hs`` (h₁ = 0 at the ingress leaf); the
+repository is an extra virtual cache with k = ∞ and cost ``h_repo``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def zeta(gamma: float) -> float:
+    """ζ ≜ 2^{(2−γ)/2}/(γ+2) — the norm-1 square-cell constant (§4.1)."""
+    return 2.0 ** ((2.0 - gamma) / 2.0) / (gamma + 2.0)
+
+
+def cell_cost(r: float, lam: float, gamma: float) -> float:
+    """c(r) = 4 λ r^{γ+2}/(γ+2): approximation cost inside one square cell
+    of radius r under norm-1 (eq. 5, two-dimensional domain)."""
+    return 4.0 * lam * r ** (gamma + 2.0) / (gamma + 2.0)
+
+
+# ------------------------------------------------------------- single cache
+def single_cache_allocation(lams: np.ndarray, k: float, gamma: float) -> np.ndarray:
+    """Optimal slots per region, k_i ∝ λ_i^{2/(γ+2)} (Lagrange, §4.1)."""
+    w = lams ** (2.0 / (gamma + 2.0))
+    return k * w / w.sum()
+
+
+def single_cache_cost(lams: np.ndarray, k: float, gamma: float) -> float:
+    """min C(k) = ζ k^{−γ/2} (Σ_i λ_i^{2/(γ+2)})^{(γ+2)/2}  (eq. 7)."""
+    s = float(np.sum(lams ** (2.0 / (gamma + 2.0))))
+    return zeta(gamma) * k ** (-gamma / 2.0) * s ** ((gamma + 2.0) / 2.0)
+
+
+# ------------------------------------------------------------------- chains
+@dataclasses.dataclass(frozen=True)
+class ChainSpec:
+    ks: tuple            # (N,) cache sizes
+    hs: tuple            # (N,) cumulative costs from the ingress, h[0] = 0
+    h_repo: float        # cost of the authoritative repository
+    gamma: float = 1.0
+
+    @property
+    def n(self) -> int:
+        return len(self.ks)
+
+
+def chain_cost(w: jnp.ndarray, lams: jnp.ndarray, spec: ChainSpec) -> jnp.ndarray:
+    """Objective (11). ``w``: (M, N+1) rows on the simplex; column j < N is
+    the fraction of region i served by cache j, column N the repository."""
+    g = spec.gamma
+    beta = 2.0 / (g + 2.0)
+    lb = lams ** beta
+    cost = 0.0
+    for j in range(spec.n):
+        wj = w[:, j]
+        mass = jnp.sum(wj * lb)
+        cost += zeta(g) * spec.ks[j] ** (-g / 2.0) * \
+            jnp.maximum(mass, 0.0) ** (1.0 / beta)
+        cost += spec.hs[j] * jnp.sum(wj * lams)
+    cost += spec.h_repo * jnp.sum(w[:, spec.n] * lams)
+    return cost
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "iters"))
+def _solve_chain_md(lams: jnp.ndarray, spec: ChainSpec, iters: int,
+                    lr: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exponentiated-gradient (mirror) descent on the per-region simplices.
+
+    (11) is convex over the product of simplices, so mirror descent with a
+    modest step count converges to the global optimum; JAX autodiff
+    supplies ∇_w of (11) exactly.
+    """
+    M = lams.shape[0]
+    w = jnp.full((M, spec.n + 1), 1.0 / (spec.n + 1))
+    grad_fn = jax.grad(chain_cost)
+
+    def body(t, w):
+        gradw = grad_fn(w, lams, spec)
+        step = lr / jnp.sqrt(1.0 + t / 50.0)
+        # per-region gradient normalization: each simplex row gets its own
+        # scale, so heterogeneous magnitudes (e.g. huge h_repo) cannot
+        # freeze the other coordinates
+        gradw = gradw / (jnp.max(jnp.abs(gradw), axis=1, keepdims=True)
+                         + 1e-12)
+        logw = jnp.log(jnp.maximum(w, 1e-30)) - step * gradw
+        logw -= jax.scipy.special.logsumexp(logw, axis=1, keepdims=True)
+        return jnp.exp(logw)
+
+    w = jax.lax.fori_loop(0, iters, body, w)
+    return w, chain_cost(w, lams, spec)
+
+
+def solve_chain(lams: np.ndarray, spec: ChainSpec, iters: int = 4000,
+                lr: float = 1.0) -> tuple[np.ndarray, float]:
+    w, c = _solve_chain_md(jnp.asarray(lams, jnp.float32), spec, iters, lr)
+    return np.asarray(w), float(c)
+
+
+def _band_cost(lams_sorted: np.ndarray, cum_lb: np.ndarray, cum_l: np.ndarray,
+               splits: np.ndarray, spec: ChainSpec) -> float:
+    """Cost of the threshold allocation given fractional split points.
+
+    ``splits`` are N nondecreasing cumulative coordinates in [0, M]; cache
+    j serves the (fractional) band [splits[j-1], splits[j]) of the
+    λ-descending-sorted regions; the repository serves the tail.
+    ``cum_lb``/``cum_l`` are prefix sums of λ^{2/(γ+2)} and λ with a
+    leading 0, linearly interpolated for fractional boundaries (a region
+    split across caches contributes proportionally — the "portion of a
+    region" of Prop 4.2).
+    """
+    g = spec.gamma
+    pos = np.concatenate([[0.0], splits, [float(len(lams_sorted))]])
+    pos = np.maximum.accumulate(np.clip(pos, 0.0, len(lams_sorted)))
+    ilb = np.interp(pos, np.arange(len(cum_lb)), cum_lb)
+    il = np.interp(pos, np.arange(len(cum_l)), cum_l)
+    cost = 0.0
+    for j in range(spec.n):
+        W = max(ilb[j + 1] - ilb[j], 0.0)
+        lam_mass = max(il[j + 1] - il[j], 0.0)
+        cost += zeta(g) * spec.ks[j] ** (-g / 2.0) * W ** ((g + 2.0) / 2.0)
+        cost += spec.hs[j] * lam_mass
+    cost += spec.h_repo * max(il[spec.n + 1] - il[spec.n], 0.0)
+    return float(cost)
+
+
+def solve_chain_thresholds(lams: np.ndarray, spec: ChainSpec,
+                           sweeps: int = 60, grid: int = 96
+                           ) -> tuple[np.ndarray, float, np.ndarray]:
+    """Prop 4.2 structure: coordinate descent over N split points of the
+    popularity-sorted axis (each 1-D problem solved by golden section).
+
+    Returns (splits, cost, order) with ``order`` the λ-descending region
+    permutation; the popularity thresholds λ*_j of Prop 4.2 are
+    ``lams[order][ceil(splits)]``.
+    """
+    order = np.argsort(-lams, kind="stable")
+    ls = lams[order].astype(np.float64)
+    g = spec.gamma
+    cum_lb = np.concatenate([[0.0], np.cumsum(ls ** (2.0 / (g + 2.0)))])
+    cum_l = np.concatenate([[0.0], np.cumsum(ls)])
+    M = float(len(ls))
+    splits = np.linspace(M / (spec.n + 1), M * spec.n / (spec.n + 1), spec.n)
+
+    def cost_at(j, x):
+        trial = splits.copy()
+        trial[j] = x
+        return _band_cost(ls, cum_lb, cum_l, trial, spec)
+
+    gr = (np.sqrt(5.0) - 1.0) / 2.0
+    for _ in range(sweeps):
+        moved = 0.0
+        for j in range(spec.n):
+            lo = splits[j - 1] if j > 0 else 0.0
+            hi = splits[j + 1] if j + 1 < spec.n else M
+            # golden-section over [lo, hi] (cost is unimodal along each
+            # coordinate by convexity of (11) restricted to the band line)
+            a, b = lo, hi
+            c1, c2 = b - gr * (b - a), a + gr * (b - a)
+            f1, f2 = cost_at(j, c1), cost_at(j, c2)
+            for _ in range(grid):
+                if f1 < f2:
+                    b, c2, f2 = c2, c1, f1
+                    c1 = b - gr * (b - a)
+                    f1 = cost_at(j, c1)
+                else:
+                    a, c1, f1 = c1, c2, f2
+                    c2 = a + gr * (b - a)
+                    f2 = cost_at(j, c2)
+            xnew = 0.5 * (a + b)
+            moved = max(moved, abs(xnew - splits[j]))
+            splits[j] = xnew
+        if moved < 1e-10 * M:
+            break
+    return splits, _band_cost(ls, cum_lb, cum_l, splits, spec), order
+
+
+def thresholds_to_w(lams: np.ndarray, splits: np.ndarray, order: np.ndarray,
+                    n_caches: int) -> np.ndarray:
+    """Convert Prop 4.2 split points into the w matrix of (11)."""
+    M = len(lams)
+    w = np.zeros((M, n_caches + 1))
+    pos = np.concatenate([[0.0], splits, [float(M)]])
+    for j in range(n_caches + 1):
+        lo, hi = pos[j], pos[j + 1]
+        for i in range(int(np.floor(lo)), int(np.ceil(hi))):
+            frac = min(hi, i + 1.0) - max(lo, float(i))
+            if frac > 0:
+                w[order[i], j] += frac
+    return w
+
+
+# -------------------------------------------------------- equi-depth trees
+def tree_cost(lams: np.ndarray, betas: np.ndarray, spec: ChainSpec,
+              use_thresholds: bool = True) -> float:
+    """Prop 4.4: optimal equi-depth-tree cost = Σ_ℓ β_ℓ × (chain cost for
+    the base rate λ). Each level replicates the chain allocation."""
+    if use_thresholds:
+        _, c, _ = solve_chain_thresholds(lams, spec)
+    else:
+        _, c = solve_chain(lams, spec)
+    return float(np.sum(betas) * c)
+
+
+# ------------------------------------- tandem with arrivals at both nodes
+def tandem_both_cost(w1: jnp.ndarray, lams: jnp.ndarray, k1: float, k2: float,
+                     h: float, beta: float, gamma: float) -> jnp.ndarray:
+    """Eq. (14): leaf keeps fraction w1_i of region i, forwards the rest
+    (its cell-border requests) to the parent; the parent also serves its
+    own arrivals β·λ. No repository (the parent covers the domain)."""
+    g = gamma
+    e = 2.0 / (2.0 + g)
+    lb = lams ** e
+    t1 = zeta(g) * k1 ** (-g / 2.0) * \
+        jnp.maximum(jnp.sum(lb * w1), 0.0) ** (1.0 / e)
+    inner = beta + jnp.maximum(1.0 - w1, 0.0) ** ((g + 2.0) / 2.0)
+    t2 = zeta(g) * k2 ** (-g / 2.0) * \
+        jnp.sum(lb * inner ** e) ** (1.0 / e)
+    t3 = h * jnp.sum(lams * (1.0 - w1))
+    return t1 + t2 + t3
+
+
+def tandem_both_grad(w1: np.ndarray, lams: np.ndarray, k1: float, k2: float,
+                     h: float, beta: float, gamma: float) -> np.ndarray:
+    """Hand-coded gradient (15) — used to cross-check JAX autodiff."""
+    g = gamma
+    e = 2.0 / (2.0 + g)
+    lb = lams ** e
+    A = np.sum(lb * w1)
+    term1 = zeta(g) * k1 ** (-g / 2.0) * (1.0 / e) * A ** (g / 2.0) * lb
+    inner = beta + (1.0 - w1) ** ((g + 2.0) / 2.0)
+    B = np.sum(lb * inner ** e)
+    dinner = -((g + 2.0) / 2.0) * (1.0 - w1) ** (g / 2.0)
+    term2 = zeta(g) * k2 ** (-g / 2.0) * (1.0 / e) * B ** (g / 2.0) * \
+        lb * e * inner ** (e - 1.0) * dinner
+    term3 = -h * lams
+    return term1 + term2 + term3
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def _solve_tandem_both(lams, k1, k2, h, beta, gamma, iters, lr):
+    """Projected gradient on w1 ∈ [0,1]^M (convex in w1 → global opt)."""
+    M = lams.shape[0]
+    w1 = jnp.full((M,), 0.5)
+    grad_fn = jax.grad(tandem_both_cost)
+
+    def body(t, w1):
+        gw = grad_fn(w1, lams, k1, k2, h, beta, gamma)
+        step = lr / jnp.sqrt(1.0 + t / 100.0)
+        gw = gw / (jnp.max(jnp.abs(gw)) + 1e-12)
+        # keep strictly below 1: at w1=1 with β=0 the parent term's
+        # derivative d(x^e)/dx|_{x→0} = ∞ would poison the next gradient
+        return jnp.clip(w1 - step * gw, 0.0, 1.0 - 1e-6)
+
+    w1 = jax.lax.fori_loop(0, iters, body, w1)
+    return w1, tandem_both_cost(w1, lams, k1, k2, h, beta, gamma)
+
+
+def solve_tandem_both(lams: np.ndarray, k1: float, k2: float, h: float,
+                      beta: float, gamma: float = 1.0, iters: int = 4000,
+                      lr: float = 0.05) -> tuple[np.ndarray, float]:
+    w1, c = _solve_tandem_both(jnp.asarray(lams, jnp.float32),
+                               float(k1), float(k2), float(h), float(beta),
+                               float(gamma), iters, lr)
+    return np.asarray(w1), float(c)
+
+
+# ------------------------------------ Fig 2: shifted regular tessellations
+def shifted_tessellation_cost(k: int, h: float, area: float, lam: float,
+                              beta: float = 1.0) -> float:
+    """Closed-form total cost of the Fig 2 allocation, γ = 1, uniform λ.
+
+    Leaf and parent each hold k slots; leaf cells are norm-1 squares of
+    radius r = sqrt(area/(2k)); parent centroids sit at leaf-cell corners.
+    z = max{0, (r−h)/2}; each parent slot reduces the leaf-arrival cost by
+    Δc = λ·(8/3)·z³ (paper §4.4). Parent arrivals (rate β·λ per unit
+    area) are approximated by the parent's own tessellation.
+    """
+    r = np.sqrt(area / (2.0 * k))
+    z = max(0.0, (r - h) / 2.0)
+    leaf_cost = k * cell_cost(r, lam, 1.0)            # k·(4/3)λr³
+    saving = k * lam * (8.0 / 3.0) * z ** 3
+    parent_cost = beta * k * cell_cost(r, lam, 1.0)
+    return leaf_cost - saving + parent_cost
+
+
+def shifted_tessellation_cost_numeric(k: int, h: float, area: float,
+                                      lam: float, beta: float = 1.0,
+                                      gamma: float = 1.0,
+                                      samples: int = 512) -> float:
+    """General-γ numerical version (quadrature over one tessellation
+    period): leaf arrivals pay min(d_leaf^γ, d_parent^γ + h); parent
+    arrivals pay d_parent^γ. Validates the γ=1 closed form and supplies
+    the curves of Fig 6 for other γ."""
+    r = np.sqrt(area / (2.0 * k))
+    # period cell [0, 2r)²; leaf centers at (a·r, b·r), a+b even; parent
+    # centers at a+b odd (the corners — maximally shifted, Fig 2)
+    xs = (np.arange(samples) + 0.5) * (2.0 * r / samples)
+    X, Y = np.meshgrid(xs, xs, indexing="ij")
+    d_leaf = np.full_like(X, np.inf)
+    d_par = np.full_like(X, np.inf)
+    for a in range(-1, 4):
+        for b in range(-1, 4):
+            d = np.abs(X - a * r) + np.abs(Y - b * r)
+            if (a + b) % 2 == 0:
+                d_leaf = np.minimum(d_leaf, d)
+            else:
+                d_par = np.minimum(d_par, d)
+    leaf_point = np.minimum(d_leaf ** gamma, d_par ** gamma + h)
+    par_point = d_par ** gamma
+    cell_area = (2.0 * r) ** 2
+    n_cells = area / cell_area
+    w = cell_area / X.size
+    return float(n_cells * w * lam *
+                 (np.sum(leaf_point) + beta * np.sum(par_point)))

@@ -1,0 +1,112 @@
+"""NETDUEL — online, λ-unaware dynamic policy (paper §5).
+
+Networked extension of DUEL [12]: each *real* cached object is paired
+with a *virtual* competitor (metadata only, drawn from the arrival
+process). Over an observation window we accumulate, per duel, the cost
+saving each contender produces:
+
+* real object in slot y:    saving_r = C(r, A \\ {y}) − C(r, A)
+  (positive only for requests whose best approximizer is y; equals
+  best2 − best1 for those requests);
+* virtual object v at cache j(y): saving_r = max(0, C(r, A) − C_a(o, v)
+  − h(i, j(y))) — the cost reduction v *would* have produced.
+
+At the end of the window the virtual replaces the real iff its
+accumulated saving exceeds the real's by a relative margin δ; otherwise
+it is discarded and the slot is re-armed with a fresh virtual object
+taken later from the arrival stream. The policy needs no knowledge of λ.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.objective import Instance, random_slots
+from repro.core.placement.localswap import SwapState
+
+
+@dataclasses.dataclass
+class DuelState:
+    sw: SwapState                       # reuse best1/arg1/best2 bookkeeping
+    virt: np.ndarray                    # (K,) virtual object id or −1
+    real_sav: np.ndarray                # (K,) accumulated real savings
+    virt_sav: np.ndarray                # (K,)
+    deadline: np.ndarray                # (K,) request-count when duel ends
+    n_promotions: int = 0
+    served_cost: float = 0.0
+    n_served: int = 0
+
+
+def netduel(inst: Instance, n_iters: int = 200000, seed: int = 0,
+            window: int = 2000, delta: float = 0.05, arm_prob: float = 0.25,
+            slots0: np.ndarray | None = None,
+            requests: tuple[np.ndarray, np.ndarray] | None = None,
+            record_every: int = 0) -> DuelState:
+    """Run NETDUEL over a request stream; returns final state.
+
+    ``delta`` is the relative winning margin: promote iff
+    virt_sav > (1+δ)·real_sav. ``window`` is the duel length in requests.
+    """
+    rng = np.random.default_rng(seed)
+    slots = random_slots(inst, rng) if slots0 is None else slots0.copy()
+    K = slots.shape[0]
+    st = DuelState(
+        sw=SwapState.init(inst, slots),
+        virt=np.full(K, -1, dtype=np.int64),
+        real_sav=np.zeros(K), virt_sav=np.zeros(K),
+        deadline=np.zeros(K, dtype=np.int64))
+    if requests is None:
+        objs, ings = inst.dem.sample(n_iters, rng)
+    else:
+        objs, ings = requests
+    arm_draws = rng.random(len(objs))
+    cost_trace = []
+
+    H, ca = inst.net.H, inst.ca
+    slot_cache = inst.slot_cache
+    for t in range(len(objs)):
+        o, i = int(objs[t]), int(ings[t])
+        b1 = float(st.sw.best1[i, o])
+        a1 = int(st.sw.arg1[i, o])
+        st.served_cost += b1
+        st.n_served += 1
+
+        # -- real savings: only the best slot saves anything for r
+        if a1 >= 0:
+            st.real_sav[a1] += float(st.sw.best2[i, o]) - b1
+
+        # -- virtual savings for every armed duel on the path of i
+        armed = np.nonzero(st.virt >= 0)[0]
+        if armed.size:
+            j = slot_cache[armed]
+            vcost = ca[o, st.virt[armed]] + H[i, j]
+            st.virt_sav[armed] += np.maximum(b1 - vcost, 0.0)
+
+        # -- settle expired duels
+        expired = armed[st.deadline[armed] <= t] if armed.size else armed
+        for y in expired:
+            y = int(y)
+            if st.virt_sav[y] > (1.0 + delta) * st.real_sav[y] and \
+                    st.virt_sav[y] > 0.0:
+                st.sw.slots[y] = st.virt[y]
+                st.sw.refresh(inst)
+                st.n_promotions += 1
+            st.virt[y] = -1
+            st.real_sav[y] = st.virt_sav[y] = 0.0
+
+        # -- arm a new duel: pair this request's object with the slot it
+        #    would most plausibly replace (cheapest serving slot on path)
+        if arm_draws[t] < arm_prob:
+            free = np.nonzero((st.virt < 0)
+                              & np.isfinite(H[i])[slot_cache])[0]
+            if free.size:
+                y = int(rng.choice(free))
+                st.virt[y] = o
+                st.deadline[y] = t + window
+                st.real_sav[y] = st.virt_sav[y] = 0.0
+
+        if record_every and t % record_every == 0:
+            cost_trace.append(st.sw.cost(inst))
+    st.sw.cost_trace = cost_trace
+    return st

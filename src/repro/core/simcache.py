@@ -1,0 +1,119 @@
+"""Runtime similarity-cache network: lookup → forward → serve.
+
+This is the *online data plane* for an allocation produced by the
+placement algorithms (the paper's offline control plane). A
+:class:`SimCacheNetwork` holds, per cache level, the stored object
+embeddings ("keys") and opaque payload ids ("values" — e.g. a response
+blob or a KV-prefix handle in the serving engine).
+
+``lookup`` realizes eq. (1): every request is served by the approximizer
+minimizing C_a(o, o') + h(i, j) over the caches on its path plus the
+repository — the paper's optimal-forwarding assumption, implemented as
+the metadata probe of DESIGN.md §2 (per-level KNN minima compared
+centrally; on a real mesh the per-level minima are tiny all-gathers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.knn import nearest_approximizer
+
+REPO_LEVEL = -1
+
+
+@dataclasses.dataclass
+class CacheLevel:
+    keys: jax.Array           # (k_j, d) stored object embeddings
+    values: jax.Array         # (k_j,) payload ids (int32)
+    h: float                  # retrieval cost from the ingress
+
+
+@dataclasses.dataclass
+class LookupResult:
+    level: jax.Array          # (B,) serving level per request (−1 = repo)
+    slot: jax.Array           # (B,) slot within level (undefined for repo)
+    payload: jax.Array        # (B,) payload id (−1 for repo)
+    cost: jax.Array           # (B,) total C(r, A) incurred
+    approx_cost: jax.Array    # (B,) C_a component only
+    hit: jax.Array            # (B,) bool, served by some cache
+
+
+@dataclasses.dataclass
+class SimCacheNetwork:
+    """A chain of similarity caches in front of a repository (model)."""
+    levels: list[CacheLevel]
+    h_repo: float
+    metric: str = "l2"
+    gamma: float = 1.0
+    use_pallas: bool = True
+
+    @classmethod
+    def from_placement(cls, coords: np.ndarray, slots: np.ndarray,
+                       slot_cache: np.ndarray, hs: Sequence[float],
+                       h_repo: float, metric: str = "l2",
+                       gamma: float = 1.0, use_pallas: bool = True
+                       ) -> "SimCacheNetwork":
+        """Build the runtime network from a placement-algorithm output.
+
+        ``slots``/``slot_cache`` are the flat allocation of
+        objective.Instance; ``coords`` the catalog embeddings. Payload id
+        = object id (the serving engine maps ids to artifacts).
+        """
+        levels = []
+        for j, h in enumerate(hs):
+            idx = slots[slot_cache == j]
+            idx = idx[idx >= 0]
+            if idx.size == 0:           # empty cache level still valid
+                keys = np.zeros((1, coords.shape[1]), np.float32)
+                vals = np.full((1,), -1, np.int64)
+                keys[:] = np.float32(1e30)   # unreachable sentinel key
+            else:
+                keys = coords[idx].astype(np.float32)
+                vals = idx
+            levels.append(CacheLevel(keys=jnp.asarray(keys),
+                                     values=jnp.asarray(vals, jnp.int32),
+                                     h=float(h)))
+        return cls(levels=levels, h_repo=float(h_repo), metric=metric,
+                   gamma=gamma, use_pallas=use_pallas)
+
+    def lookup(self, queries: jax.Array) -> LookupResult:
+        """Serve a batch of query embeddings (B, d) per eq. (1)."""
+        B = queries.shape[0]
+        costs, slots_, pays, appr = [], [], [], []
+        for lv in self.levels:
+            ca, idx = nearest_approximizer(
+                queries, lv.keys, metric=self.metric, gamma=self.gamma,
+                use_pallas=self.use_pallas)
+            costs.append(ca + lv.h)
+            appr.append(ca)
+            slots_.append(idx)
+            pays.append(lv.values[idx])
+        # repository: zero approximation cost, fixed h_repo
+        costs.append(jnp.full((B,), self.h_repo, jnp.float32))
+        appr.append(jnp.zeros((B,), jnp.float32))
+        slots_.append(jnp.zeros((B,), jnp.int32))
+        pays.append(jnp.full((B,), -1, jnp.int32))
+
+        call = jnp.stack(costs)                       # (L+1, B)
+        best = jnp.argmin(call, axis=0)               # metadata probe
+        n_lv = len(self.levels)
+        level = jnp.where(best == n_lv, REPO_LEVEL, best).astype(jnp.int32)
+        take = lambda xs: jnp.take_along_axis(          # noqa: E731
+            jnp.stack(xs), best[None, :], axis=0)[0]
+        return LookupResult(
+            level=level, slot=take(slots_), payload=take(pays),
+            cost=take(costs), approx_cost=take(appr),
+            hit=level != REPO_LEVEL)
+
+    def expected_cost(self, queries: jax.Array,
+                      weights: jax.Array | None = None) -> float:
+        """Empirical C(A) over a query sample (eq. (2) estimator)."""
+        res = self.lookup(queries)
+        if weights is None:
+            return float(jnp.mean(res.cost))
+        return float(jnp.sum(weights * res.cost) / jnp.sum(weights))

@@ -1,0 +1,40 @@
+"""Deterministic synthetic LM data pipeline.
+
+Every batch is a pure function of (seed, step, shard) — the property the
+fault-tolerance story rests on: a restarted or straggling host recomputes
+*exactly* the batch it owes, so checkpoint/restart never skews the data
+order and stragglers can be re-executed anywhere (DESIGN.md §4).
+
+The token stream is a noisy affine recurrence over the vocab with
+slowly-varying per-sequence coefficients: enough learnable structure for
+a ~100M model to visibly drop loss within a few hundred steps (the
+examples/train_lm.py driver), while needing no external corpus.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMData:
+    vocab: int
+    batch: int            # per-host batch
+    seq: int
+    seed: int = 0
+    n_shards: int = 1
+    shard: int = 0
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard]))
+        B, S, V = self.batch, self.seq + 1, self.vocab
+        a = rng.integers(1, 8, size=(B, 1))
+        b = rng.integers(0, V, size=(B, 1))
+        noise = rng.integers(0, 4, size=(B, S))
+        t0 = rng.integers(0, V, size=(B, 1))
+        idx = np.arange(S)[None, :]
+        toks = (t0 + a * idx + b * (idx // 16) + noise) % V
+        toks = toks.astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

@@ -1,0 +1,6 @@
+from repro.ft.compress import (compressed_crosspod_mean, dequantize_int8,
+                               quantize_int8)
+from repro.ft.straggler import HedgedDispatcher
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_crosspod_mean",
+           "HedgedDispatcher"]

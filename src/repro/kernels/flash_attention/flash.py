@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: flash-attention forward (fused online-softmax).
+
+The memory-term lever identified in EXPERIMENTS.md §Perf: the unfused
+baseline writes the (B, H, Sq, Skv) score/probability matrices to HBM
+several times per pass; this kernel keeps each (BQ, BK) score tile in
+VMEM and maintains the online-softmax running (max m, normalizer l,
+accumulator o) per query row, so HBM traffic drops to q/k/v/o — the
+attention memory floor.
+
+Layout / tiling:
+  * inputs flattened to (B·H, S, Dh); grid = (B·H, Sq/BQ, Skv/BK) with
+    the KV axis minor (sequential) — the (m, l, o) running state lives
+    in the output VMEM blocks, indexed invariantly in the KV step (the
+    same accumulation idiom as kernels/knn and kernels/gain);
+  * GQA without materializing repeated KV: the K/V BlockSpec index maps
+    flat head bh → kv head via bh // group (integer index arithmetic in
+    the spec, zero data movement);
+  * causal + length masking from global tile offsets; the final KV step
+    normalizes o by l.
+  * BQ = BK = 128 keeps the working set (q, k, v, s tiles + state)
+    ≈ 0.6 MB ≪ VMEM, with 128-aligned MXU matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+_NEG = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, scale: float, causal: bool,
+                  kv_len: int, n_kv_blocks: int):
+    qt = pl.program_id(1)
+    kt = pl.program_id(2)
+    q = q_ref[0].astype(jnp.float32)                      # (BQ, Dh)
+    k = k_ref[0].astype(jnp.float32)                      # (BK, Dh)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    q_idx = qt * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_idx = kt * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_idx < kv_len
+    if causal:
+        mask = mask & (k_idx <= q_idx)
+    s = jnp.where(mask, s, _NEG)
+
+    @pl.when(kt == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    m_prev = m_ref[0]                                     # (BQ, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                                # (BQ, BK)
+    corr = jnp.exp(m_prev - m_new)                        # (BQ, 1)
+    l_new = l_ref[0] * corr + jnp.sum(p, axis=1, keepdims=True)
+    o_new = o_ref[0] * corr + jnp.dot(p, v,
+                                      preferred_element_type=jnp.float32)
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    o_ref[0] = o_new
+
+    @pl.when(kt == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_groups", "scale", "causal", "kv_len", "bq", "bk", "interpret"))
+def flash_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 n_groups: int, scale: float, causal: bool, kv_len: int,
+                 bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                 interpret: bool = True):
+    """q: (BH, Sq, Dh); k, v: (BKVH, Skv, Dh) with BH = BKVH·n_groups·B
+    ordering (bh → kv row bh // n_groups). Pre-padded: Sq % bq == 0,
+    Skv % bk == 0. Returns o (BH, Sq, Dh) f32."""
+    BH, Sq, Dh = q.shape
+    Skv = k.shape[1]
+    grid = (BH, Sq // bq, Skv // bk)
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, scale=scale, causal=causal,
+        kv_len=kv_len, n_kv_blocks=Skv // bk)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda bh, qt, kt: (bh, qt, 0)),
+            pl.BlockSpec((1, bk, Dh),
+                         lambda bh, qt, kt, g=n_groups: (bh // g, kt, 0)),
+            pl.BlockSpec((1, bk, Dh),
+                         lambda bh, qt, kt, g=n_groups: (bh // g, kt, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda bh, qt, kt: (bh, qt, 0)),
+            pl.BlockSpec((1, bq, 1), lambda bh, qt, kt: (bh, qt, 0)),
+            pl.BlockSpec((1, bq, 1), lambda bh, qt, kt: (bh, qt, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sq, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Sq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Sq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    del m, l
+    return o

@@ -1,0 +1,52 @@
+"""Jitted public wrapper for the flash-attention forward kernel.
+
+Handles the (B, S, H, Dh) ↔ (B·H, S, Dh) layout, GQA head grouping (the
+kernel indexes KV heads via block maps — no repeat), and seq padding
+(padded KV masked inside the kernel via kv_len; padded queries sliced
+off). Falls back to the jnp oracle when ``use_pallas=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash import (DEFAULT_BK, DEFAULT_BQ,
+                                                 flash_pallas)
+from repro.kernels.flash_attention.ref import flash_ref
+from repro.kernels.knn.ops import _on_tpu
+
+
+def _pad_seq(x: jax.Array, mult: int) -> jax.Array:
+    pad = (-x.shape[1]) % mult
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                              "use_pallas", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = DEFAULT_BQ,
+                    bk: int = DEFAULT_BK, use_pallas: bool = True,
+                    interpret: bool | None = None) -> jax.Array:
+    """Fused GQA attention forward. q: (B, Sq, H, Dh); k, v:
+    (B, Skv, KH, Dh), H % KH == 0. Returns (B, Sq, H, Dh) in q.dtype."""
+    if not use_pallas:
+        return flash_ref(q, k, v, causal=causal)
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, H, Dh = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    groups = H // KH
+    scale = 1.0 / float(Dh) ** 0.5
+
+    qf = _pad_seq(q.transpose(0, 2, 1, 3).reshape(B * H, Sq, Dh), bq)
+    kf = _pad_seq(k.transpose(0, 2, 1, 3).reshape(B * KH, Skv, Dh), bk)
+    vf = _pad_seq(v.transpose(0, 2, 1, 3).reshape(B * KH, Skv, Dh), bk)
+    o = flash_pallas(qf, kf, vf, n_groups=groups, scale=scale,
+                     causal=causal, kv_len=Skv, bq=bq, bk=bk,
+                     interpret=interpret)
+    o = o[:, :Sq].reshape(B, H, Sq, Dh).transpose(0, 2, 1, 3)
+    return o.astype(q.dtype)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the flash-attention kernel: standard (unfused)
+GQA attention, numerically identical semantics (f32 softmax)."""
+from __future__ import annotations
+
+from repro.models.layers import gqa_attention
+
+
+def flash_ref(q, k, v, causal: bool = True, kv_len=None):
+    """q: (B, Sq, H, Dh); k, v: (B, Skv, KH, Dh) → (B, Sq, H, Dh)."""
+    return gqa_attention(q, k, v, causal=causal, kv_len=kv_len)

@@ -1,0 +1,4 @@
+from repro.kernels.gain.ops import greedy_gain
+from repro.kernels.gain.ref import gain_ref
+
+__all__ = ["greedy_gain", "gain_ref"]

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the GREEDY marginal-gain reduction.
+
+gain[o', j] = Σ_r λ_r · relu(cur_r − C_a(x_r, y_{o'}) − H[r, j])
+
+i.e. the total rate-weighted cost reduction of adding candidate object o'
+at cache j, given the current per-request serving costs ``cur`` (paper
+§3.2: argmax_α G(A ∪ {α}) − G(A)). ``H[r, j]`` is the retrieval cost
+from request r's ingress to cache j (+inf ⇒ off-path ⇒ zero gain).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gain_ref(x: jnp.ndarray, y: jnp.ndarray, lam: jnp.ndarray,
+             cur: jnp.ndarray, hreq: jnp.ndarray, metric: str = "l2",
+             gamma: float = 1.0) -> jnp.ndarray:
+    """x: (R, D) requests; y: (O, D) candidates; lam, cur: (R,);
+    hreq: (R, J). Returns (O, J) gains, f32."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    if metric == "l1":
+        d = jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+    elif metric in ("l2", "l2sq"):
+        d2 = (jnp.sum(x * x, -1)[:, None] + jnp.sum(y * y, -1)[None, :]
+              - 2.0 * x @ y.T)
+        d2 = jnp.maximum(d2, 0.0)
+        d = d2 if metric == "l2sq" else jnp.sqrt(d2)
+    else:
+        raise ValueError(metric)
+    ca = d if gamma == 1.0 else jnp.power(jnp.maximum(d, 0.0), gamma)
+    slack = cur[:, None, None] - ca[:, :, None] - hreq[:, None, :]  # (R,O,J)
+    return jnp.sum(lam[:, None, None] * jnp.maximum(slack, 0.0), axis=0)

@@ -1,0 +1,4 @@
+from repro.kernels.knn.ops import nearest_approximizer, pad_for_knn
+from repro.kernels.knn.ref import knn_ref
+
+__all__ = ["nearest_approximizer", "pad_for_knn", "knn_ref"]

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: blocked nearest-approximizer (1-NN) lookup.
+
+This is the serving-path hot spot of the similarity cache (paper §2: the
+"closest stored object" query, which the paper delegates to LSH; DESIGN.md
+§6 explains why a blocked exact scan is the TPU-native equivalent).
+
+Layout / tiling:
+  * grid = (Q//BQ, K//BK); the key axis is the minor (fastest) grid dim,
+    so each query tile sees key tiles sequentially and accumulates a
+    running (min cost, argmin index) pair in its output VMEM block.
+  * q tile (BQ, D) and k tile (BK, D) live in VMEM; the L2 path computes
+    the (BQ, BK) distance block with one MXU matmul via the
+    |q|² + |k|² − 2·q·kᵀ identity (f32 accumulation).
+  * the L1 path (the paper's norm-1 experiments) has no matmul form; it
+    accumulates |q−k| over D in chunks of ``DC`` to bound the
+    (BQ, BK, DC) broadcast temporary — VPU work, still VMEM-resident.
+  * D is zero-padded to a lane multiple and K is padded by *repeating
+    key 0* — ties break to the lower index, so padded duplicates can
+    never win over the genuine entry (see ops.py).
+
+Block defaults keep the working set ≲ 2.5 MB ≪ 16 MB VMEM and the MXU
+dims 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+L1_CHUNK = 8
+_INF = 3.0e38  # python float: jnp scalars would be captured as consts
+
+
+def _distance_block(q, k, metric: str):
+    """(BQ, BK) distances between f32 tiles q (BQ, D), k (BK, D)."""
+    if metric in ("l2", "l2sq"):
+        d2 = (jnp.sum(q * q, axis=-1)[:, None]
+              + jnp.sum(k * k, axis=-1)[None, :]
+              - 2.0 * jnp.dot(q, k.T, preferred_element_type=jnp.float32))
+        d2 = jnp.maximum(d2, 0.0)
+        return d2 if metric == "l2sq" else jnp.sqrt(d2)
+    if metric == "l1":
+        bq, d = q.shape
+        bk = k.shape[0]
+        acc = jnp.zeros((bq, bk), dtype=jnp.float32)
+        for c in range(0, d, L1_CHUNK):
+            qc = q[:, c:c + L1_CHUNK][:, None, :]      # (BQ, 1, DC)
+            kc = k[:, c:c + L1_CHUNK][None, :, :]      # (1, BK, DC)
+            acc = acc + jnp.sum(jnp.abs(qc - kc), axis=-1)
+        return acc
+    raise ValueError(metric)
+
+
+def _knn_kernel(q_ref, k_ref, mind_ref, argm_ref, *, bk: int, metric: str,
+                gamma: float):
+    kt = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    cost = _distance_block(q, k, metric)
+    if gamma != 1.0:
+        cost = jnp.power(jnp.maximum(cost, 0.0), gamma)
+    local_min = jnp.min(cost, axis=1, keepdims=True)               # (BQ, 1)
+    local_arg = jnp.argmin(cost, axis=1).astype(jnp.int32)[:, None]
+    local_arg = local_arg + kt * bk
+
+    @pl.when(kt == 0)
+    def _init():
+        mind_ref[...] = jnp.full_like(mind_ref, _INF)
+        argm_ref[...] = jnp.zeros_like(argm_ref)
+
+    better = local_min < mind_ref[...]
+    mind_ref[...] = jnp.where(better, local_min, mind_ref[...])
+    argm_ref[...] = jnp.where(better, local_arg, argm_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "metric", "gamma", "bq", "bk", "interpret"))
+def knn_pallas(queries: jax.Array, keys: jax.Array, metric: str = "l2",
+               gamma: float = 1.0, bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+               interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Blocked 1-NN. Inputs must be pre-padded: Q % bq == 0, K % bk == 0,
+    with key padding = repeats of keys[0] (see ops.pad_for_knn)."""
+    Q, D = queries.shape
+    K, _ = keys.shape
+    assert Q % bq == 0 and K % bk == 0, (Q, K, bq, bk)
+    grid = (Q // bq, K // bk)
+    kernel = functools.partial(_knn_kernel, bk=bk, metric=metric, gamma=gamma)
+    mind, argm = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, D), lambda qt, kt: (qt, 0)),
+            pl.BlockSpec((bk, D), lambda qt, kt: (kt, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, 1), lambda qt, kt: (qt, 0)),
+            pl.BlockSpec((bq, 1), lambda qt, kt: (qt, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, keys)
+    return mind[:, 0], argm[:, 0]

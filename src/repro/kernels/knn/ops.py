@@ -1,0 +1,72 @@
+"""Jitted public wrapper around the KNN Pallas kernel.
+
+Handles padding (queries → BQ multiple with zeros, keys → BK multiple by
+repeating key 0 so ties break to the genuine lower index, feature dim →
+lane multiple with zeros, which preserves both L1 and L2 distances), and
+falls back to the pure-jnp oracle on platforms without Pallas TPU support
+unless ``interpret=True`` (the default off-TPU) is requested.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.knn.knn import DEFAULT_BK, DEFAULT_BQ, knn_pallas
+from repro.kernels.knn.ref import knn_ref
+
+LANE = 128
+
+
+def _pad_axis(x: jax.Array, mult: int, axis: int, mode: str) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    if mode == "zero":
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(x, widths)
+    if mode == "repeat_first":
+        first = jax.lax.slice_in_dim(x, 0, 1, axis=axis)
+        reps = jnp.concatenate([first] * pad, axis=axis)
+        return jnp.concatenate([x, reps], axis=axis)
+    raise ValueError(mode)
+
+
+def pad_for_knn(queries: jax.Array, keys: jax.Array, bq: int, bk: int
+                ) -> tuple[jax.Array, jax.Array]:
+    queries = _pad_axis(_pad_axis(queries, LANE, 1, "zero"), bq, 0, "zero")
+    keys = _pad_axis(_pad_axis(keys, LANE, 1, "zero"), bk, 0, "repeat_first")
+    return queries, keys
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "gamma", "bq", "bk",
+                                              "use_pallas", "interpret"))
+def nearest_approximizer(queries: jax.Array, keys: jax.Array,
+                         metric: str = "l2", gamma: float = 1.0,
+                         bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                         use_pallas: bool = True,
+                         interpret: bool | None = None
+                         ) -> tuple[jax.Array, jax.Array]:
+    """min_k C_a(q, key_k) and the argmin index, per query.
+
+    The public lookup primitive of the similarity cache: returns the
+    dissimilarity cost d(q, k)^γ of the best stored approximizer and its
+    slot index.
+    """
+    nq = queries.shape[0]
+    if not use_pallas:
+        return knn_ref(queries, keys, metric, gamma)
+    if interpret is None:
+        interpret = not _on_tpu()
+    qp, kp = pad_for_knn(queries.astype(jnp.float32),
+                         keys.astype(jnp.float32), bq, bk)
+    mind, argm = knn_pallas(qp, kp, metric=metric, gamma=gamma, bq=bq, bk=bk,
+                            interpret=interpret)
+    return mind[:nq], argm[:nq]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the KNN (nearest-approximizer) lookup.
+
+Semantics shared with the Pallas kernel (knn.py) and the jit wrapper
+(ops.py): given queries (Q, D) and keys (K, D), return per query the
+minimum dissimilarity cost d(q, k)^γ and the argmin key index.
+Ties break toward the lowest index (both implementations scan keys in
+ascending order and use strict < for updates).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def knn_ref(queries: jnp.ndarray, keys: jnp.ndarray, metric: str = "l2",
+            gamma: float = 1.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    q = queries.astype(jnp.float32)
+    k = keys.astype(jnp.float32)
+    if metric == "l1":
+        d = jnp.sum(jnp.abs(q[:, None, :] - k[None, :, :]), axis=-1)
+    elif metric in ("l2", "l2sq"):
+        d2 = (jnp.sum(q * q, -1)[:, None] + jnp.sum(k * k, -1)[None, :]
+              - 2.0 * q @ k.T)
+        d2 = jnp.maximum(d2, 0.0)
+        d = d2 if metric == "l2sq" else jnp.sqrt(d2)
+    else:
+        raise ValueError(metric)
+    cost = d if gamma == 1.0 else jnp.power(jnp.maximum(d, 0.0), gamma)
+    idx = jnp.argmin(cost, axis=1).astype(jnp.int32)
+    return jnp.min(cost, axis=1), idx

@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init). Everything below is ordinary code.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape) cell, on both the single-pod
+(16×16) and multi-pod (2×16×16) production meshes:
+
+    lowered  = jit(step, in_shardings=…).lower(*abstract_inputs)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis(), compiled.cost_analysis())
+
+A cell that fails to lower or compile (sharding mismatch, unsupported
+collective) is a bug in the system. Results (memory, FLOPs, collective
+schedule, roofline terms) are written to results/dryrun/*.json —
+resumable: existing cells are skipped unless --force.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single multi [--force] [--seq-shard]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import get_config, list_archs
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPES, build_cell, supported
+from repro.launch.sharding import count_devices
+from repro.optim import AdamWConfig
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def opt_for(cfg) -> AdamWConfig:
+    """8-bit moments for ≥30B models (otherwise f32) — the memory math of
+    EXPERIMENTS.md §Dry-run; quality note in DESIGN.md."""
+    from repro.models.schema import param_count
+    big = param_count(cfg) > 30e9
+    return AdamWConfig(moment_dtype="int8" if big else "float32")
+
+
+def _measure(cfg, shape_name, mesh, n_dev, seq_shard, want_mem=False,
+             **pol):
+    """Lower + compile one configuration; return cost/collective stats."""
+    fn, args, shardings = build_cell(cfg, shape_name, mesh, opt_for(cfg),
+                                     seq_shard=seq_shard, **pol)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        mem = compiled.memory_analysis() if want_mem else None
+    coll = rf.parse_collectives(hlo, n_dev)
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0)),
+           "coll_bytes": coll["bytes_per_device"],
+           "coll": coll, "cost": cost}
+    if want_mem and mem is not None:
+        out["mem"] = {k: int(getattr(mem, k)) for k in
+                      ("argument_size_in_bytes", "output_size_in_bytes",
+                       "temp_size_in_bytes", "alias_size_in_bytes")
+                      if getattr(mem, k, None) is not None}
+    return out
+
+
+def _probe_cfg(cfg, k: int):
+    """k-super-block unrolled variant for scan-cost extrapolation.
+
+    XLA's cost analysis counts while-loop bodies ONCE; measuring unrolled
+    1- and 2-super-block probes separates per-block cost (body = m2−m1)
+    from the fixed part, and total = fixed + n_super·body. Documented in
+    EXPERIMENTS.md §Dry-run (methodology)."""
+    from repro.models.schema import block_pattern
+    period = len(block_pattern(cfg))
+    kw = dict(name=f"{cfg.name}-probe{k}", n_layers=k * period,
+              scan_layers=False)
+    if cfg.is_encdec:
+        kw["n_enc_layers"] = k * max(cfg.n_enc_layers
+                                     // (cfg.n_layers // period), 1)
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             seq_shard: bool = False, verbose: bool = True,
+             ffn_mode: str = "tp", attn_override: str | None = None,
+             serve_fsdp: bool = True, moe_dispatch: str | None = None,
+             bf16_flows: bool = False, kv_int8: bool = False) -> dict:
+    cfg = get_config(arch)
+    if moe_dispatch:
+        cfg = dataclasses.replace(cfg, moe_dispatch=moe_dispatch)
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    pol = dict(ffn_mode=ffn_mode, attn_override=attn_override,
+               serve_fsdp=serve_fsdp, bf16_flows=bf16_flows)
+    ok, reason = supported(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+    from repro.models.schema import block_pattern
+    n_super = cfg.n_layers // len(block_pattern(cfg))
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = count_devices(mesh)
+    cell = SHAPES[shape_name]
+
+    t0 = time.time()
+    full = _measure(cfg, shape_name, mesh, n_dev, seq_shard, want_mem=True,
+                    **pol)
+    t_full = time.time() - t0
+    # scan-body extrapolation probes (1 and 2 unrolled super-blocks)
+    m1 = _measure(_probe_cfg(cfg, 1), shape_name, mesh, n_dev, seq_shard,
+                  **pol)
+    m2 = _measure(_probe_cfg(cfg, 2), shape_name, mesh, n_dev, seq_shard,
+                  **pol)
+    corr = {}
+    for key in ("flops", "bytes", "coll_bytes"):
+        body = max(m2[key] - m1[key], 0.0)
+        fixed = max(m1[key] - body, 0.0)
+        corr[key] = fixed + n_super * body
+    # compute term: analytic accounting (inner sequential scans are
+    # invisible even to the probes — see roofline.analytic_flops);
+    # memory term: analytic HBM model (XLA 'bytes accessed' on the CPU
+    # backend over-counts due to weak fusion — reported alongside)
+    flops_dev = max(corr["flops"], rf.analytic_flops(cfg, cell) / n_dev)
+    bytes_dev = rf.analytic_bytes(cfg, cell, n_dev,
+                                  opt_for(cfg).moment_dtype,
+                                  ffn_mode=ffn_mode)
+
+    roof = rf.roofline(flops_dev, bytes_dev, corr["coll_bytes"],
+                       full["coll"], cfg, cell, n_dev,
+                       raw_cost=full["cost"])
+    roof["xla_bytes_extrapolated"] = corr["bytes"]
+    res = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "devices": n_dev, "n_super": n_super,
+        "wall_s": round(time.time() - t0, 1),
+        "compile_s_full": round(t_full, 1),
+        "memory_analysis": full.get("mem", {}),
+        "raw_flops_per_device": full["flops"],
+        "raw_bytes_per_device": full["bytes"],
+        "extrapolated": corr,
+        "analytic_flops_global": rf.analytic_flops(cfg, cell),
+        "roofline": roof,
+        "seq_shard": seq_shard,
+        "policy": {**pol, "moe_dispatch": cfg.moe_dispatch,
+                   "kv_cache_dtype": cfg.kv_cache_dtype},
+    }
+    if verbose:
+        mem = full.get("mem", {})
+        ppd = (mem.get("argument_size_in_bytes", 0)) / 2**30
+        tmp = (mem.get("temp_size_in_bytes", 0)) / 2**30
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_kind}: OK "
+              f"({n_dev} dev, args {ppd:.2f} GiB/dev, temp {tmp:.2f} GiB, "
+              f"compute {roof['compute_s']:.3e}s, "
+              f"mem {roof['memory_s']:.3e}s, "
+              f"coll {roof['collective_s']:.3e}s → {roof['dominant']}, "
+              f"roofline {roof['roofline_fraction']*100:.1f}%, "
+              f"wall {res['wall_s']:.0f}s)")
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="+", default=["all"])
+    ap.add_argument("--shape", nargs="+", default=["all"])
+    ap.add_argument("--mesh", nargs="+", default=["single", "multi"],
+                    choices=["single", "multi"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-shard prefill activations (perf knob)")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--tag", default="",
+                    help="suffix for result files (perf experiments)")
+    ap.add_argument("--ffn-mode", default="tp", choices=["tp", "dp", "dp_batch"])
+    ap.add_argument("--attn-strategy", default=None,
+                    choices=[None, "heads", "batch", "seq", "kv_seq"])
+    ap.add_argument("--no-serve-fsdp", action="store_true")
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=[None, "einsum", "gather"])
+    ap.add_argument("--bf16-flows", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == ["all"] else args.arch
+    shapes = list(SHAPES) if args.shape == ["all"] else args.shape
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in args.mesh:
+                tag = f"_{args.tag}" if args.tag else ""
+                path = os.path.join(args.out,
+                                    f"{arch}__{shape}__{mesh_kind}{tag}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[dryrun] {arch} × {shape} × {mesh_kind}: cached")
+                    continue
+                try:
+                    res = run_cell(arch, shape, mesh_kind,
+                                   seq_shard=args.seq_shard,
+                                   ffn_mode=args.ffn_mode,
+                                   attn_override=args.attn_strategy,
+                                   serve_fsdp=not args.no_serve_fsdp,
+                                   moe_dispatch=args.moe_dispatch,
+                                   bf16_flows=args.bf16_flows,
+                                   kv_int8=args.kv_int8)
+                    if res["status"] == "ok":
+                        n_ok += 1
+                    else:
+                        n_skip += 1
+                        print(f"[dryrun] {arch} × {shape} × {mesh_kind}: "
+                              f"SKIP ({res['reason']})")
+                except Exception as e:           # a failed cell is a bug
+                    n_fail += 1
+                    res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "status": "failed", "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"[dryrun] {arch} × {shape} × {mesh_kind}: "
+                          f"FAILED — {e}")
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

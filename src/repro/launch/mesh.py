@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. Single pod: 16×16 = 256 chips (v5e pod),
+axes (data, model). Multi-pod: 2×16×16 = 512 chips, axes
+(pod, data, model); the "pod" axis crosses DCN, so shardings place only
+batch parallelism (and compressed gradient reduction) on it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Tiny mesh for CPU integration tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count≥n_data·n_model)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# v5e hardware constants used by the roofline analysis (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link

@@ -1,0 +1,65 @@
+"""Recompute roofline dicts for stored dry-run JSONs (no recompilation).
+
+Used when the roofline *formulas* change (e.g. the decode bandwidth
+floor); the measured artifacts (extrapolated flops/bytes/collectives,
+memory analysis) are reused as-is.
+
+  PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.registry import get_config
+from repro.launch import roofline as rf
+from repro.launch.specs import SHAPES
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun")
+
+
+def reanalyze_file(path: str) -> bool:
+    with open(path) as f:
+        r = json.load(f)
+    if r.get("status") != "ok":
+        return False
+    cfg = get_config(r["arch"])
+    if r.get("policy", {}).get("moe_dispatch") == "gather":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, moe_dispatch="gather")
+    cell = SHAPES[r["shape"]]
+    n_dev = r["devices"]
+    corr = r["extrapolated"]
+    flops_dev = max(corr["flops"], rf.analytic_flops(cfg, cell) / n_dev)
+    moment = "int8" if r["arch"] in ("jamba-1.5-large-398b", "dbrx-132b",
+                                     "deepseek-67b", "deepseek-coder-33b") \
+        else "float32"
+    bytes_dev = rf.analytic_bytes(
+        cfg, cell, n_dev, moment,
+        ffn_mode=r.get("policy", {}).get("ffn_mode", "tp"))
+    old = r["roofline"]
+    roof = rf.roofline(flops_dev, bytes_dev, corr["coll_bytes"],
+                       {"counts": old.get("collective_counts", {}),
+                        "per_op_bytes": old.get("collective_per_op_bytes",
+                                                {})},
+                       cfg, cell, n_dev,
+                       raw_cost=old.get("raw_cost_analysis", {}))
+    roof["xla_bytes_extrapolated"] = corr["bytes"]
+    r["roofline"] = roof
+    r["analytic_flops_global"] = rf.analytic_flops(cfg, cell)
+    with open(path, "w") as f:
+        json.dump(r, f, indent=1)
+    return True
+
+
+def main() -> None:
+    n = 0
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        n += reanalyze_file(path)
+    print(f"[reanalyze] updated {n} cells")
+
+
+if __name__ == "__main__":
+    main()

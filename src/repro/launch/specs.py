@@ -1,0 +1,201 @@
+"""Input specs and sharded step builders for every (arch × shape) cell.
+
+ShapeDtypeStruct stand-ins only — nothing here allocates. The dry-run
+lowers ``train_step`` for train shapes and ``serve_step`` (one decoded
+token against a seq_len KV cache) for decode shapes, exactly as the
+assignment defines the cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import MeshShardPolicy, replicated
+from repro.models import model as model_api
+from repro.models import schema as schema_api
+from repro.models.transformer import init_cache
+from repro.optim import AdamWConfig, adamw_update, cosine_schedule
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq: int
+    batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def supported(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic sequence mixing (spec: skip pure
+    full-attention archs and note it)."""
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention arch: long_500k skipped per "
+                       "assignment (needs sub-quadratic attention)")
+    return True, ""
+
+
+# -------------------------------------------------------- abstract trees
+def abstract_params(cfg: ArchConfig, dtype: str | None = None) -> Any:
+    dt = jnp.dtype(dtype or cfg.param_dtype)
+
+    def walk(node):
+        if isinstance(node, schema_api.ParamSpec):
+            return SDS(node.shape, dt)
+        return {k: walk(v) for k, v in node.items()}
+    return walk(schema_api.param_schema(cfg))
+
+
+def abstract_opt_state(cfg: ArchConfig, opt: AdamWConfig) -> Any:
+    def moment(node):
+        if isinstance(node, schema_api.ParamSpec):
+            if opt.moment_dtype == "int8":
+                return {"q": SDS(node.shape, jnp.int8),
+                        "s": SDS(node.shape[:-1] + (1,), jnp.float32)}
+            return SDS(node.shape, jnp.dtype(opt.moment_dtype))
+        return {k: moment(v) for k, v in node.items()}
+    tree = schema_api.param_schema(cfg)
+    return {"m": moment(tree), "v": moment(tree),
+            "step": SDS((), jnp.int32)}
+
+
+def train_batch_shapes(cfg: ArchConfig, cell: ShapeCell,
+                       with_labels: bool = True) -> dict:
+    B, S = cell.batch, cell.seq
+    ct = jnp.dtype(cfg.compute_dtype)
+    out: dict = {}
+    if cfg.is_encdec:
+        s_dec = max(S // 4, 64)
+        out["audio_embeds"] = SDS((B, S, 128), ct)
+        out["tokens"] = SDS((B, s_dec), jnp.int32)
+        if with_labels:
+            out["labels"] = SDS((B, s_dec), jnp.int32)
+    elif cfg.mrope:
+        s_img = S // 4
+        out["image_embeds"] = SDS((B, s_img, 1280), ct)
+        out["tokens"] = SDS((B, S - s_img), jnp.int32)
+        out["mrope_positions"] = SDS((3, B, S), jnp.int32)
+        if with_labels:
+            out["labels"] = SDS((B, S - s_img), jnp.int32)
+    else:
+        out["tokens"] = SDS((B, S), jnp.int32)
+        if with_labels:
+            out["labels"] = SDS((B, S), jnp.int32)
+    return out
+
+
+def abstract_caches(cfg: ArchConfig, B: int, S: int) -> Any:
+    return jax.eval_shape(lambda: init_cache(cfg, B, S))
+
+
+# ----------------------------------------------------------- step fns --
+def make_train_step(cfg: ArchConfig, policy: MeshShardPolicy,
+                    opt: AdamWConfig, bf16_flows: bool = False,
+                    grad_shardings=None):
+    """``bf16_flows``: cast the f32 master params to bf16 once per step
+    *before* the forward — the FSDP weight all-gathers then move bf16
+    (2× fewer bytes) and, because autodiff differentiates w.r.t. the
+    bf16 copies, the gradient reduce-scatters are bf16 too. The f32
+    master + moments stay in the optimizer (mixed-precision standard;
+    §Perf before/after)."""
+    fwd = model_api.make_train_forward(cfg, policy)
+    ct = jnp.dtype(cfg.compute_dtype)
+
+    def train_step(params, opt_state, batch):
+        if bf16_flows:
+            def inner(p16, batch):
+                return fwd(p16, batch)
+            p16 = jax.tree.map(lambda p: p.astype(ct), params)
+            (loss, metrics), grads16 = jax.value_and_grad(
+                inner, has_aux=True)(p16, batch)
+            grads = grads16
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                fwd, has_aux=True)(params, batch)
+        if grad_shardings is not None:
+            # pin grads to the parameter layout BEFORE the global-norm
+            # clip: the partial gradients then reduce-scatter (1×) into
+            # shards instead of full all-reducing (2×) to satisfy the
+            # replicated norm computation (§Perf iteration log)
+            grads = jax.tree.map(jax.lax.with_sharding_constraint,
+                                 grads, grad_shardings)
+        lr = cosine_schedule(opt_state["step"])
+        new_params, new_state = adamw_update(grads, opt_state, params, opt,
+                                             lr_scale=lr)
+        return new_params, new_state, loss, metrics
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, policy: MeshShardPolicy):
+    return model_api.make_serve_step(cfg, policy)
+
+
+def make_prefill_step(cfg: ArchConfig, policy: MeshShardPolicy):
+    return model_api.make_prefill(cfg, policy)
+
+
+# ------------------------------------------------- cell assembly (dryrun)
+def build_cell(cfg: ArchConfig, shape_name: str, mesh, opt: AdamWConfig,
+               seq_shard: bool = False, ffn_mode: str = "tp",
+               attn_override: str | None = None, serve_fsdp: bool = True,
+               bf16_flows: bool = False):
+    """Returns (fn, abstract_args, in_shardings) for one dry-run cell."""
+    cell = SHAPES[shape_name]
+    schema_tree = schema_api.param_schema(cfg)
+    pol = dict(ffn_mode=ffn_mode, attn_override=attn_override,
+               serve_fsdp=serve_fsdp)
+
+    if cell.kind == "train":
+        policy = MeshShardPolicy.create(cfg, mesh, "train",
+                                        seq_shard=seq_shard, **pol)
+        pshard = policy.param_sharding_tree(schema_tree)
+        fn = make_train_step(cfg, policy, opt, bf16_flows=bf16_flows,
+                             grad_shardings=pshard)
+        params = abstract_params(cfg)
+        opt_state = abstract_opt_state(cfg, opt)
+        batch = train_batch_shapes(cfg, cell)
+        shardings = (
+            pshard,
+            {"m": policy.moment_sharding_tree(schema_tree, opt.moment_dtype),
+             "v": policy.moment_sharding_tree(schema_tree, opt.moment_dtype),
+             "step": replicated(mesh)},
+            policy.batch_sharding_tree(batch),
+        )
+        return fn, (params, opt_state, batch), shardings
+
+    if cell.kind == "prefill":
+        policy = MeshShardPolicy.create(cfg, mesh, "prefill",
+                                        seq_shard=seq_shard, **pol)
+        fn = make_prefill_step(cfg, policy)
+        params = abstract_params(cfg, dtype=cfg.compute_dtype)  # serving
+        batch = train_batch_shapes(cfg, cell, with_labels=False)
+        shardings = (policy.param_sharding_tree(schema_tree),
+                     policy.batch_sharding_tree(batch))
+        return fn, (params, batch), shardings
+
+    # decode: one new token against a seq_len cache
+    policy = MeshShardPolicy.create(cfg, mesh, "decode", **pol)
+    fn = make_serve_step(cfg, policy)
+    params = abstract_params(cfg, dtype=cfg.compute_dtype)
+    B = cell.batch
+    tokens = SDS((B, 1), jnp.int32)
+    caches = abstract_caches(cfg, B, cell.seq)
+    pos = SDS((), jnp.int32)
+    shardings = (policy.param_sharding_tree(schema_tree),
+                 policy.batch_sharding_tree({"tokens": tokens})["tokens"],
+                 policy.cache_sharding_tree(caches),
+                 replicated(mesh))
+    return fn, (params, tokens, caches, pos), shardings

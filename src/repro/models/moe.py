@@ -1,0 +1,179 @@
+"""Mixture-of-Experts layer: top-k routing with grouped einsum dispatch.
+
+GShard-style static-capacity dispatch, adapted for TPU SPMD:
+
+  * tokens are split into groups of ``group_size`` so the one-hot
+    dispatch/combine tensors stay (G, Tg, E, Cg) with Tg small — memory
+    O(T·E·Cg/G) instead of O(T·E·C) (the classic GShard memory cliff);
+  * experts run as one stacked einsum over the expert axis, which shards
+    cleanly over the mesh "model"/"experts" axis (expert parallelism);
+    the combine einsum contracts the expert axis → one all-reduce, the
+    canonical EP collective;
+  * capacity C_g = ceil(Tg · k · capacity_factor / E); overflow tokens
+    are dropped (their residual passes through — standard behaviour);
+  * the router computes in f32 and returns the Switch-style load-balance
+    auxiliary loss.
+
+Expert-axis sharding requires E % mesh_model == 0; the resolver
+(launch/sharding.py) otherwise falls back to within-expert d_ff sharding
+(granite-moe: 40 experts, d_ff=512).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _capacity(tg: int, k: int, e: int, cf: float) -> int:
+    if cf <= 0:                        # no-drop mode (decode): worst case
+        return tg * k
+    c = int(tg * k * cf / e) + 1
+    return max(c, 1)
+
+
+def _route(xt_2d: jax.Array, router: jax.Array, topk: int):
+    """Shared routing: top-k gates + Switch aux loss. xt_2d: (T, D)."""
+    E = router.shape[1]
+    logits = jnp.einsum("td,de->te", xt_2d.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                 # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, topk)        # (T, K)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+    me = jnp.mean(probs, axis=0)
+    fe = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E), axis=0)
+    aux = E * jnp.sum(me * fe)
+    return gate_vals, gate_idx, aux
+
+
+def _positions_in_expert(gate_idx: jax.Array, E: int, cap: int):
+    """Capacity assignment, sequential over the K choices.
+    gate_idx: (..., T, K) → (pos_in_expert (..., T, K), keep mask)."""
+    T_axis = -2
+    counts = None
+    poss, keeps = [], []
+    K = gate_idx.shape[-1]
+    for k in range(K):
+        idx_k = gate_idx[..., k]
+        mask_k = jax.nn.one_hot(idx_k, E, dtype=jnp.int32)   # (..., T, E)
+        base = jnp.cumsum(mask_k, axis=T_axis) - mask_k
+        if counts is not None:
+            base = base + counts[..., None, :]
+        pos_k = jnp.sum(base * mask_k, axis=-1)              # (..., T)
+        poss.append(pos_k)
+        keeps.append(pos_k < cap)
+        counts = (0 if counts is None else counts) + \
+            jnp.sum(mask_k, axis=T_axis)
+    return jnp.stack(poss, -1), jnp.stack(keeps, -1)
+
+
+def _moe_einsum(x, router, we_gate, we_up, we_down, topk, capacity_factor,
+                group_size, shard):
+    """GShard-style grouped one-hot dispatch (the TPU-classic baseline).
+
+    The dispatch/combine einsums cost T·E_loc·Cg·D each — under expert
+    sharding this does NOT shrink with E, so it can exceed the expert
+    matmuls themselves (the known GShard dispatch tax; quantified in
+    EXPERIMENTS.md §Perf, where the gather path removes it)."""
+    B, S, D = x.shape
+    E = router.shape[1]
+    T = B * S
+    g = min(group_size, T)
+    while T % g:                       # group size must divide tokens
+        g -= 1
+    G, Tg = T // g, g
+    Cg = _capacity(Tg, topk, E, capacity_factor)
+    xt = x.reshape(G, Tg, D)
+
+    gate_vals, gate_idx, aux = _route(x.reshape(T, D), router, topk)
+    gate_vals = gate_vals.reshape(G, Tg, -1)
+    gate_idx = gate_idx.reshape(G, Tg, -1)
+    pos, keep = _positions_in_expert(gate_idx, E, Cg)        # (G, Tg, K)
+
+    dispatch = jnp.zeros((G, Tg, E, Cg), x.dtype)
+    combine = jnp.zeros((G, Tg, E, Cg), jnp.float32)
+    for k in range(gate_idx.shape[-1]):
+        mask_k = jax.nn.one_hot(gate_idx[..., k], E, dtype=x.dtype)
+        oh_pos = jax.nn.one_hot(jnp.where(keep[..., k], pos[..., k], Cg),
+                                Cg, dtype=x.dtype)
+        sel = mask_k[..., None] * oh_pos[..., None, :]
+        dispatch = dispatch + sel
+        combine = combine + sel.astype(jnp.float32) * \
+            (gate_vals[..., k] * keep[..., k])[..., None, None]
+
+    xe = jnp.einsum("gtec,gtd->egcd", dispatch, xt)          # (E, G, Cg, D)
+    if shard is not None:
+        xe = shard(xe, ("experts", "moe_group", None, "embed"))
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe,
+                               we_gate.astype(x.dtype)))
+    h = h * jnp.einsum("egcd,edf->egcf", xe, we_up.astype(x.dtype))
+    ye = jnp.einsum("egcf,efd->egcd", h, we_down.astype(x.dtype))
+    if shard is not None:
+        ye = shard(ye, ("experts", "moe_group", None, "embed"))
+    y = jnp.einsum("gtec,egcd->gtd", combine.astype(x.dtype), ye)
+    return y.reshape(B, S, D), aux
+
+
+def _moe_gather(x, router, we_gate, we_up, we_down, topk, capacity_factor,
+                group_size, shard):
+    """Grouped gather/scatter dispatch (beyond-paper optimization, §Perf).
+
+    Replaces the O(T·E·Cg·D) one-hot dispatch/combine einsums with
+    O(slots·D) batched gathers. Groups follow the token (batch) sharding,
+    so every scatter/gather stays shard-local under SPMD — the only MoE
+    collective left is the expert-contraction all-reduce. Dispatch FLOPs
+    ≈ 0 (pure data movement); capacity/drop semantics identical to the
+    einsum path (same _positions_in_expert)."""
+    B, S, D = x.shape
+    E = router.shape[1]
+    T = B * S
+    g = min(group_size, T)
+    while T % g:
+        g -= 1
+    G, Tg = T // g, g
+    Cg = _capacity(Tg, topk, E, capacity_factor)
+    xt = x.reshape(G, Tg, D)
+
+    gate_vals, gate_idx, aux = _route(x.reshape(T, D), router, topk)
+    gate_vals = gate_vals.reshape(G, Tg, -1)                 # (G, Tg, K)
+    gate_idx = gate_idx.reshape(G, Tg, -1)
+    pos, keep = _positions_in_expert(gate_idx, E, Cg)        # (G, Tg, K)
+
+    slot = gate_idx * Cg + pos                               # (G, Tg, K)
+    slot = jnp.where(keep, slot, E * Cg)                     # overflow slot
+    tok_ids = jnp.broadcast_to(
+        jnp.arange(Tg, dtype=jnp.int32)[None, :, None], slot.shape)
+    token_of_slot = jnp.zeros((G, E * Cg), jnp.int32)
+    token_of_slot = token_of_slot.at[
+        jnp.arange(G, dtype=jnp.int32)[:, None],
+        slot.reshape(G, -1)].set(tok_ids.reshape(G, -1), mode="drop")
+
+    xe = jnp.take_along_axis(xt, token_of_slot[..., None], axis=1)
+    xe = xe.reshape(G, E, Cg, D)
+    if shard is not None:
+        xe = shard(xe, ("moe_group", "experts", None, "embed"))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe,
+                               we_gate.astype(x.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, we_up.astype(x.dtype))
+    ye = jnp.einsum("gecf,efd->gecd", h, we_down.astype(x.dtype))
+    if shard is not None:
+        ye = shard(ye, ("moe_group", "experts", None, "embed"))
+    ye_flat = ye.reshape(G, E * Cg, D)
+    picked = jnp.take_along_axis(
+        ye_flat, jnp.minimum(slot.reshape(G, -1), E * Cg - 1)[..., None],
+        axis=1).reshape(G, Tg, -1, D)
+    picked = jnp.where(keep[..., None], picked, 0.0)
+    y = jnp.sum(picked * gate_vals[..., None].astype(x.dtype), axis=2)
+    return y.reshape(B, S, D), aux
+
+
+def moe_mlp(x: jax.Array, router: jax.Array, we_gate: jax.Array,
+            we_up: jax.Array, we_down: jax.Array, topk: int,
+            capacity_factor: float = 1.25, group_size: int = 512,
+            dispatch: str = "einsum", shard=None
+            ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (y, aux_loss). Expert weights: (E, D, F)/(E, F, D)."""
+    if dispatch == "gather":
+        return _moe_gather(x, router, we_gate, we_up, we_down, topk,
+                           capacity_factor, group_size, shard)
+    return _moe_einsum(x, router, we_gate, we_up, we_down, topk,
+                       capacity_factor, group_size, shard)

@@ -1,0 +1,35 @@
+"""Sharding policy interface the models are written against.
+
+Models never import mesh machinery; they call ``shard(x, logical_axes)``
+and consult the few strategy knobs below. launch/sharding.py provides a
+mesh-aware implementation; the default is a no-op (single device smoke
+tests, examples).
+
+Attention strategies (resolved per arch × mode by launch/sharding.py):
+  * "heads"  — classic TP: q heads over the model axis; KV heads are
+    repeated to the TP degree when kv < tp (GQA), so both operands of the
+    attention einsums carry the model axis (no redundant compute);
+  * "batch"  — DP attention: batch over (data×model) inside the attention
+    sublayer only (archs whose head count doesn't divide the model axis:
+    deepseek-coder 56H, phi3 40H, qwen2-vl 28H, whisper 12H);
+  * "kv_seq" — decode: the KV cache (and score) sequence axis over the
+    model axis — distributed flash-decode; partial softmax combines via
+    the all-reduce XLA inserts;
+  * "none"   — no attention-specific sharding (smoke/CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPolicy:
+    attn_strategy: str = "none"      # heads | batch | kv_seq | none
+    kv_repeat: int = 1               # KV head repetition under heads-TP
+
+    def __call__(self, x, axes):
+        """Apply a sharding constraint for logical ``axes``; no-op here."""
+        return x
+
+
+NO_SHARD = ShardPolicy()

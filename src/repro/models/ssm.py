@@ -1,0 +1,256 @@
+"""Recurrent sequence mixers: Mamba (selective SSM) and xLSTM (mLSTM +
+sLSTM), in TPU-friendly chunkwise-parallel forms.
+
+Hardware adaptation (DESIGN.md §6): the CUDA Mamba kernel's
+shared-memory selective scan becomes a *chunked associative scan* — the
+sequence is processed in VMEM-sized chunks via ``lax.scan`` (inter-chunk
+recurrence) with ``lax.associative_scan`` inside each chunk (intra-chunk
+parallelism on the VPU). The (B, chunk, D_inner, N) discretized-state
+tensor is the VMEM working set; D_inner shards over the mesh "model"
+axis. The mLSTM uses the chunkwise gated-linear-attention form with
+sigmoid gating (stable without the max-stabilizer; log-decay ratios are
+exponentiated only for s ≤ t so every factor is ≤ 1).
+
+All mixers expose both a parallel form (train/prefill) and an O(1)
+single-step form (decode), sharing parameters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------- mamba ---
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array
+                           ) -> jax.Array:
+    """x: (B, S, Di); w: (CW, Di) depthwise causal conv via shifted adds
+    (no conv op → trivially shardable on Di)."""
+    cw = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        shift = cw - 1 - i
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1], :] \
+            if shift else x
+        out = out + xs * w[i]
+    return out + b
+
+
+def _ssm_scan_chunk(h0: jax.Array, dA: jax.Array, dBx: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """One chunk of the selective scan. h0: (B, Di, N);
+    dA, dBx: (B, C, Di, N). Returns (h_end, h_all (B, C, Di, N))."""
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a2 * a1, a2 * b1 + b2
+    cumA, inner = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h_all = cumA * h0[:, None] + inner
+    return h_all[:, -1], h_all
+
+
+def mamba_mixer(x: jax.Array, p: dict, cfg, state: dict | None = None,
+                mode: str = "train", chunk: int = 128
+                ) -> tuple[jax.Array, dict | None]:
+    """x: (B, S, D). state (decode): {"h": (B, Di, N), "conv": (B, CW−1, Di)}."""
+    B, S, D = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    cw = cfg.ssm_conv
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    x1, z = jnp.split(xz, 2, axis=-1)                       # (B, S, Di)
+
+    if mode == "decode":
+        assert state is not None and S == 1
+        buf = jnp.concatenate([state["conv"], x1], axis=1)  # (B, CW, Di)
+        conv = jnp.einsum("bwd,wd->bd", buf,
+                          p["conv_w"].astype(x.dtype))[:, None, :] \
+            + p["conv_b"].astype(x.dtype)
+        new_conv = buf[:, 1:, :]
+    else:
+        conv = _causal_depthwise_conv(x1, p["conv_w"].astype(x.dtype),
+                                      p["conv_b"].astype(x.dtype))
+        new_conv = None
+    xc = jax.nn.silu(conv)
+
+    xdb = jnp.einsum("bsd,de->bse", xc, p["x_proj"].astype(x.dtype))
+    dt_low = xdb[..., :cfg.ssm_dt_rank]
+    Bc = xdb[..., cfg.ssm_dt_rank:cfg.ssm_dt_rank + n].astype(jnp.float32)
+    Cc = xdb[..., cfg.ssm_dt_rank + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_low, p["dt_w"].astype(x.dtype))
+        .astype(jnp.float32) + p["dt_b"].astype(jnp.float32))  # (B,S,Di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (Di, N)
+    xcf = xc.astype(jnp.float32)
+
+    if mode == "decode":
+        dA = jnp.exp(dt[:, 0, :, None] * A)                     # (B, Di, N)
+        dBx = (dt[:, 0, :, None] * Bc[:, 0, None, :]
+               * xcf[:, 0, :, None])
+        h = dA * state["h"] + dBx
+        y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None, :]
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        nchunks = max(S // chunk, 1)
+        csize = S // nchunks
+        assert S % nchunks == 0, (S, chunk)
+
+        def step(h0, xs):
+            dt_c, Bc_c, x_c = xs                                # (B,C,·)
+            dA = jnp.exp(dt_c[..., None] * A)                   # (B,C,Di,N)
+            dBx = dt_c[..., None] * Bc_c[:, :, None, :] * x_c[..., None]
+            h_end, h_all = _ssm_scan_chunk(h0, dA, dBx)
+            return h_end, h_all
+
+        resh = lambda a: a.reshape(B, nchunks, csize, *a.shape[2:]) \
+            .swapaxes(0, 1)                                     # noqa: E731
+        h0 = jnp.zeros((B, di, n), jnp.float32) if state is None \
+            else state["h"]
+        h_end, h_chunks = jax.lax.scan(
+            step, h0, (resh(dt), resh(Bc), resh(xcf)))
+        h_all = h_chunks.swapaxes(0, 1).reshape(B, S, di, n)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, Cc)
+        new_state = None
+        if mode == "prefill":
+            new_state = {"h": h_end,
+                         "conv": x1[:, S - (cw - 1):, :] if S >= cw - 1
+                         else jnp.pad(x1, ((0, 0), (cw - 1 - S, 0), (0, 0)))}
+    y = (y + p["Dskip"].astype(jnp.float32) * xcf).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype)), \
+        new_state
+
+
+# --------------------------------------------------------------- mLSTM ---
+def _mlstm_chunk(q, k, v, li, lf, C0, n0, eps=1.0):
+    """Chunkwise gated linear attention (sigmoid-gated mLSTM).
+
+    q,k,v: (B, H, C, dh); li/lf: (B, H, C) log input/forget gates (≤ 0).
+    C0: (B, H, dh, dh); n0: (B, H, dh). Returns (y, C1, n1)."""
+    csz = q.shape[2]
+    lF = jnp.cumsum(lf, axis=-1)                    # log Π f up to t
+    # inter-chunk: y_state_t = F_t · q_t C0
+    decay_t = jnp.exp(lF)[..., None]                # (B,H,C,1)
+    y_state = decay_t * jnp.einsum("bhtd,bhde->bhte", q, C0)
+    n_state = decay_t * jnp.einsum("bhtd,bhd->bht", q, n0)[..., None]
+    # intra-chunk: w[t,s] = exp(lF_t − lF_s) · i_s for s ≤ t  (≤ 1·i_s)
+    logw = lF[:, :, :, None] - lF[:, :, None, :] + li[:, :, None, :]
+    tri = jnp.tril(jnp.ones((csz, csz), bool))
+    w = jnp.where(tri, jnp.exp(logw), 0.0)          # (B,H,C,C)
+    qk = jnp.einsum("bhtd,bhsd->bhts", q, k)
+    scores = qk * w
+    y_intra = jnp.einsum("bhts,bhsd->bhtd", scores, v)
+    # n_intra_t = Σ_{s≤t} w[t,s] · (q_t · k_s)
+    n_intra = jnp.sum(scores, axis=-1, keepdims=True)   # (B,H,C,1)
+    den = jnp.maximum(jnp.abs(n_state + n_intra), eps)
+    y = (y_state + y_intra) / den
+    # chunk-end state
+    decay_end = jnp.exp(lF[:, :, -1])[..., None, None]
+    rel = jnp.exp(lF[:, :, -1:] - lF) * jnp.exp(li)  # (B,H,C)
+    C1 = decay_end * C0 + jnp.einsum("bhs,bhsd,bhse->bhde", rel, k, v)
+    n1 = decay_end[..., 0] * n0 + jnp.einsum("bhs,bhsd->bhd", rel, k)
+    return y, C1, n1
+
+
+def mlstm_mixer(x: jax.Array, p: dict, cfg, state: dict | None = None,
+                mode: str = "train") -> tuple[jax.Array, dict | None]:
+    """x: (B, S, D). state: {"C": (B,H,dh,dh), "n": (B,H,dh)} f32."""
+    B, S, D = x.shape
+    nh = cfg.n_heads
+    di = cfg.ssm_expand * D
+    dh = di // nh
+    to_f32 = lambda a: a.astype(jnp.float32)            # noqa: E731
+    q = jnp.einsum("bsd,dhe->bhse", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bhse", x, p["wk"].astype(x.dtype)) / \
+        jnp.sqrt(jnp.float32(dh)).astype(x.dtype)
+    v = jnp.einsum("bsd,dhe->bhse", x, p["wv"].astype(x.dtype))
+    gates = jnp.einsum("bsd,dgh->bgsh", x.astype(jnp.float32),
+                       p["w_if"].astype(jnp.float32))   # (B,2,S,H)
+    li = jax.nn.log_sigmoid(gates[:, 0].swapaxes(1, 2))  # (B,H,S)
+    lf = jax.nn.log_sigmoid(gates[:, 1].swapaxes(1, 2))
+    q, k, v = to_f32(q), to_f32(k), to_f32(v)
+
+    if mode == "decode":
+        assert S == 1 and state is not None
+        f = jnp.exp(lf[:, :, 0])[..., None, None]
+        i = jnp.exp(li[:, :, 0])[..., None, None]
+        C = f * state["C"] + i * jnp.einsum("bhd,bhe->bhde",
+                                            k[:, :, 0], v[:, :, 0])
+        n = f[..., 0] * state["n"] + i[..., 0] * k[:, :, 0]
+        # xLSTM normalizer: lower-bound 1 (not eps) — keeps the
+        # output bounded when q ⟂ n and the recurrence numerically stable
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh",
+                                             q[:, :, 0], n)), 1.0)
+        y = jnp.einsum("bhd,bhde->bhe", q[:, :, 0], C) / den[..., None]
+        y = y[:, :, None, :]
+        new_state = {"C": C, "n": n}
+    else:
+        csz = min(cfg.xlstm_chunk, S)
+        while S % csz:
+            csz -= 1
+        nchunks = S // csz
+        # (B, nh, S, ·) → (nchunks, B, nh, csz, ·) for scan xs
+        r4 = lambda a: a.reshape(B, nh, nchunks, csz, a.shape[-1]) \
+            .transpose(2, 0, 1, 3, 4)                   # noqa: E731
+        r3 = lambda a: a.reshape(B, nh, nchunks, csz) \
+            .transpose(2, 0, 1, 3)                      # noqa: E731
+
+        def step(carry, xs):
+            C0, n0 = carry
+            qc, kc, vc, lic, lfc = xs
+            y, C1, n1 = _mlstm_chunk(qc, kc, vc, lic, lfc, C0, n0)
+            return (C1, n1), y
+
+        C0 = jnp.zeros((B, nh, dh, dh), jnp.float32) if state is None \
+            else state["C"]
+        n0 = jnp.zeros((B, nh, dh), jnp.float32) if state is None \
+            else state["n"]
+        (C1, n1), ys = jax.lax.scan(
+            step, (C0, n0), (r4(q), r4(k), r4(v), r3(li), r3(lf)))
+        y = ys.transpose(1, 2, 0, 3, 4).reshape(B, nh, S, dh)
+        new_state = {"C": C1, "n": n1} if mode == "prefill" else None
+
+    y = y.swapaxes(1, 2).reshape(B, S, di).astype(x.dtype)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x,
+                                   p["w_og"].astype(x.dtype)))
+    return jnp.einsum("bse,ed->bsd", y * og,
+                      p["w_out"].astype(x.dtype)), new_state
+
+
+# --------------------------------------------------------------- sLSTM ---
+def slstm_mixer(x: jax.Array, p: dict, cfg, state: dict | None = None,
+                mode: str = "train") -> tuple[jax.Array, dict | None]:
+    """Scalar-memory LSTM with per-head block-diagonal recurrence.
+    state: {"c": (B,H,dh), "n": (B,H,dh), "h": (B,H,dh)} f32."""
+    B, S, D = x.shape
+    nh = cfg.n_heads
+    dh = D // nh
+    wx = jnp.einsum("bsd,dghe->bsghe", x.astype(jnp.float32),
+                    p["w_izfo"].astype(jnp.float32))    # (B,S,4,H,dh)
+    r = p["r_izfo"].astype(jnp.float32)                 # (4,H,dh,dh)
+    b = p["b_izfo"].astype(jnp.float32)                 # (4,H,dh)
+
+    def cell(carry, wxt):
+        c, n, h = carry                                  # (B,H,dh) each
+        rec = jnp.einsum("bhe,ghef->bghf", h, r)
+        z = wxt + rec + b                                # (B,4,H,dh)
+        i = jax.nn.sigmoid(z[:, 0])
+        zin = jnp.tanh(z[:, 1])
+        f = jax.nn.sigmoid(z[:, 2])
+        o = jax.nn.sigmoid(z[:, 3])
+        c1 = f * c + i * zin
+        n1 = f * n + i
+        h1 = o * c1 / jnp.maximum(n1, 1e-6)
+        return (c1, n1, h1), h1
+
+    if state is None:
+        z0 = jnp.zeros((B, nh, dh), jnp.float32)
+        carry = (z0, z0, z0)
+    else:
+        carry = (state["c"], state["n"], state["h"])
+    carry, hs = jax.lax.scan(cell, carry, wx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(B, S, D).astype(x.dtype)
+    new_state = None
+    if mode in ("prefill", "decode"):
+        new_state = {"c": carry[0], "n": carry[1], "h": carry[2]}
+    return jnp.einsum("bsd,de->bse", y, p["w_sout"].astype(x.dtype)), \
+        new_state

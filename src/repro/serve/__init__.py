@@ -1,0 +1,3 @@
+from repro.serve.engine import EngineConfig, ServeStats, SimCacheEngine
+
+__all__ = ["SimCacheEngine", "EngineConfig", "ServeStats"]

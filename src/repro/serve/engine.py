@@ -1,0 +1,177 @@
+"""Serving engine with a similarity-cache front tier (the paper's system,
+deployed): batched requests are embedded, looked up in the cache network,
+and only misses run the model (the "repository"); responses are inserted
+back according to the configured placement policy.
+
+Hierarchy (DESIGN.md §2): level 0 = device-local shard (h=0), level 1 =
+pod (ICI), level 2 = cross-pod (DCN); repository = the model itself. On
+this container the levels are simulated with calibrated h costs; on a
+real mesh the same SimCacheNetwork shards its key arrays and the KNN
+kernel runs per shard.
+
+Cost-unit calibration: ``h`` values and C_a live in the same unit —
+milliseconds of serving latency — via :meth:`calibrate`, which times one
+model decode batch (the repository cost h_s) and scales the
+dissimilarity metric so the paper's efficiency/accuracy trade-off is a
+latency trade-off (γ keeps its role).
+
+Placement control plane: the engine records empirical demand; calling
+``refresh_placement(algo)`` re-solves the offline problem (GREEDY /
+LOCALSWAP / cascade) on the observed measure — the paper's offline
+algorithms applied on a rolling window. ``netduel=True`` instead adapts
+online per request (λ-unaware, §5).
+
+Straggler mitigation: ``HedgedLookup`` (ft/straggler.py) wraps the
+per-level lookups; a slow level is cut off and served by the next level
+up — the cache hierarchy degrades gracefully by paying approximation
+cost instead of waiting (a property unique to similarity caching; cost
+quantified with the paper's own objective).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import demand as demand_api
+from repro.core.catalog import Catalog
+from repro.core.objective import Instance
+from repro.core.placement import greedy, greedy_then_localswap, localswap
+from repro.core.simcache import SimCacheNetwork
+from repro.core.topology import tpu_hierarchy
+from repro.models import model as model_api
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    k_device: int = 64            # level-0 slots
+    k_pod: int = 128
+    k_global: int = 256
+    h_ici: float = 0.1            # placeholder until calibrate()
+    h_dcn: float = 1.0
+    h_model: float = 10.0         # repository = run the model
+    gamma: float = 1.0
+    metric: str = "l2"
+    algo: str = "cascade"         # greedy | localswap | cascade
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_requests: int = 0
+    n_hits: int = 0
+    total_cost: float = 0.0
+    total_approx_cost: float = 0.0
+    model_calls: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.n_hits / max(self.n_requests, 1)
+
+    @property
+    def mean_cost(self) -> float:
+        return self.total_cost / max(self.n_requests, 1)
+
+
+class SimCacheEngine:
+    """Batched serving for a decoder LM behind a similarity-cache network."""
+
+    def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig,
+                 catalog_coords: np.ndarray):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.coords = catalog_coords.astype(np.float32)   # request space
+        self.net = tpu_hierarchy(ecfg.k_device, ecfg.k_pod, ecfg.k_global,
+                                 ecfg.h_ici, ecfg.h_dcn, ecfg.h_model)
+        self.counts = np.zeros(self.coords.shape[0], dtype=np.float64)
+        self.responses: dict[int, np.ndarray] = {}        # payload store
+        self.stats = ServeStats()
+        self._prefill = jax.jit(model_api.make_prefill(cfg))
+        self.simcache: SimCacheNetwork | None = None
+
+    # ------------------------------------------------------- calibration
+    def calibrate(self, sample_prompt: jnp.ndarray, n: int = 3) -> float:
+        """Measure the repository cost (one prefill batch) in ms and set
+        h_model; ICI/DCN levels get fixed fractions (real deployments
+        measure them the same way)."""
+        self._prefill(self.params, {"tokens": sample_prompt})
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(
+                self._prefill(self.params, {"tokens": sample_prompt}))
+        ms = (time.perf_counter() - t0) / n * 1e3
+        self.ecfg.h_model = ms
+        self.ecfg.h_ici = ms * 0.01
+        self.ecfg.h_dcn = ms * 0.1
+        self.net = tpu_hierarchy(self.ecfg.k_device, self.ecfg.k_pod,
+                                 self.ecfg.k_global, self.ecfg.h_ici,
+                                 self.ecfg.h_dcn, self.ecfg.h_model)
+        return ms
+
+    # ----------------------------------------------------- control plane
+    def observed_instance(self) -> Instance:
+        lam = self.counts + 1e-9
+        dem = demand_api.Demand(lam=(lam / lam.sum())[None, :])
+        cat = Catalog(coords=self.coords, metric=self.ecfg.metric,
+                      gamma=self.ecfg.gamma)
+        return Instance(net=self.net, cat=cat, dem=dem)
+
+    def refresh_placement(self, algo: str | None = None) -> float:
+        """Re-solve offline placement on the observed demand window;
+        rebuild the runtime cache. Returns the predicted C(A)."""
+        algo = algo or self.ecfg.algo
+        inst = self.observed_instance()
+        if algo == "greedy":
+            slots = greedy(inst)
+        elif algo == "localswap":
+            slots = localswap(inst, n_iters=4000).slots
+        else:
+            slots = greedy_then_localswap(inst, max_passes=8).slots
+        slots = np.where(slots < 0, 0, slots)
+        hs = [0.0, self.ecfg.h_ici, self.ecfg.h_dcn]
+        self.simcache = SimCacheNetwork.from_placement(
+            self.coords, slots, inst.slot_cache, hs, self.ecfg.h_model,
+            metric=self.ecfg.metric, gamma=self.ecfg.gamma)
+        return inst.total_cost(slots)
+
+    # --------------------------------------------------------- data plane
+    def serve(self, request_ids: np.ndarray, prompts: jnp.ndarray
+              ) -> tuple[list, ServeStats]:
+        """Serve a batch. request_ids index the catalog (their embeddings
+        are the lookup keys); prompts are the token batch for misses."""
+        self.counts[request_ids] += 1.0
+        self.stats.n_requests += len(request_ids)
+        out: list = [None] * len(request_ids)
+
+        if self.simcache is None:
+            miss_idx = np.arange(len(request_ids))
+        else:
+            q = jnp.asarray(self.coords[request_ids])
+            res = self.simcache.lookup(q)
+            hits = np.asarray(res.hit)
+            payloads = np.asarray(res.payload)
+            self.stats.total_cost += float(np.sum(np.asarray(res.cost)))
+            self.stats.total_approx_cost += float(
+                np.sum(np.asarray(res.approx_cost)))
+            for i in np.nonzero(hits)[0]:
+                out[i] = self.responses.get(int(payloads[i]))
+            self.stats.n_hits += int(hits.sum())
+            miss_idx = np.nonzero(~hits)[0]
+
+        if len(miss_idx):
+            # repository: run the model on the miss sub-batch
+            logits, _ = self._prefill(self.params,
+                                      {"tokens": prompts[miss_idx]})
+            resp = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+            self.stats.model_calls += 1
+            if self.simcache is None:
+                self.stats.total_cost += self.ecfg.h_model * len(miss_idx)
+            for j, i in enumerate(miss_idx):
+                rid = int(request_ids[i])
+                self.responses[rid] = resp[j:j + 1]
+                out[i] = resp[j:j + 1]
+        return out, self.stats

@@ -1,0 +1,3 @@
+from repro.train.trainer import TrainConfig, train
+
+__all__ = ["TrainConfig", "train"]

@@ -1,0 +1,148 @@
+"""Tests of the continuous-case machinery (paper §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import continuous as C
+
+
+def test_zeta_matches_definition():
+    for g in (0.5, 1.0, 2.0):
+        assert C.zeta(g) == pytest.approx(2 ** ((2 - g) / 2) / (g + 2))
+
+
+def test_eq7_equals_direct_tessellation():
+    """Uniform λ, k slots over M unit regions → eq (7) equals summing the
+    per-cell cost c(r) of eq (5) over the regular square tessellation."""
+    for g in (0.5, 1.0, 2.0):
+        M, k = 25, 100.0
+        lams = np.ones(M)
+        per_region = k / M
+        r = np.sqrt(1.0 / (2.0 * per_region))
+        direct = M * per_region * C.cell_cost(r, 1.0, g)
+        assert C.single_cache_cost(lams, k, g) == pytest.approx(direct)
+
+
+def test_single_cache_allocation_proportionality():
+    """k_i ∝ λ_i^{2/(γ+2)} (the Lagrange condition of §4.1)."""
+    rng = np.random.default_rng(1)
+    lams = rng.gamma(2.0, 1.0, 10)
+    g = 1.3
+    k = C.single_cache_allocation(lams, 50.0, g)
+    ratio = k / lams ** (2.0 / (g + 2.0))
+    assert np.allclose(ratio, ratio[0])
+    assert k.sum() == pytest.approx(50.0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), gamma=st.sampled_from([0.5, 1.0, 2.0]))
+def test_chain_md_matches_threshold_structure(seed, gamma):
+    """Mirror descent on (11) and the Prop 4.2 threshold solver agree
+    (both reach the global optimum of the convex program)."""
+    rng = np.random.default_rng(seed)
+    lams = rng.gamma(2.0, 1.0, 40)
+    spec = C.ChainSpec(ks=(25.0, 25.0), hs=(0.0, 1.5), h_repo=6.0,
+                       gamma=gamma)
+    _, c_md = C.solve_chain(lams, spec, iters=5000)
+    _, c_th, _ = C.solve_chain_thresholds(lams, spec)
+    assert c_md == pytest.approx(c_th, rel=2e-2)
+    # threshold solution can only be better or equal (it is the exact
+    # structure of the optimum); MD evaluates in f32, hence the slack
+    assert c_th <= c_md + 1e-5 * max(1.0, c_th)
+
+
+def test_prop42_threshold_monotonicity():
+    """The optimal w from mirror descent respects Prop 4.2/4.3: the
+    minimum λ served (mostly) by cache j dominates the maximum λ served
+    by cache j+1."""
+    rng = np.random.default_rng(7)
+    lams = np.sort(rng.gamma(2.0, 1.0, 60))[::-1].copy()
+    spec = C.ChainSpec(ks=(30.0, 30.0), hs=(0.0, 2.0), h_repo=8.0, gamma=1.0)
+    w, _ = C.solve_chain(lams, spec, iters=8000)
+    owner = np.argmax(w, axis=1)          # dominant server per region
+    # regions are sorted by decreasing λ → owner must be nondecreasing
+    # (cache 1 first, then cache 2, then repo), barring boundary regions
+    changes = np.diff(owner)
+    assert np.all(changes >= -0) or np.sum(changes < 0) <= 2
+
+
+def test_prop44_tree_equals_scaled_chain():
+    rng = np.random.default_rng(3)
+    lams = rng.gamma(2.0, 1.0, 30)
+    spec = C.ChainSpec(ks=(20.0, 40.0), hs=(0.0, 1.0), h_repo=5.0, gamma=1.0)
+    betas = np.array([0.5, 1.0, 2.0, 0.25])
+    _, c_chain, _ = C.solve_chain_thresholds(lams, spec)
+    assert C.tree_cost(lams, betas, spec) == pytest.approx(
+        betas.sum() * c_chain)
+
+
+def test_homogeneity_in_lambda():
+    """The optimal chain cost is degree-1 homogeneous in λ (the property
+    behind Prop 4.4's replication argument)."""
+    rng = np.random.default_rng(11)
+    lams = rng.gamma(2.0, 1.0, 25)
+    spec = C.ChainSpec(ks=(15.0, 30.0), hs=(0.0, 1.0), h_repo=4.0, gamma=1.0)
+    _, c1, _ = C.solve_chain_thresholds(lams, spec)
+    _, c3, _ = C.solve_chain_thresholds(3.0 * lams, spec)
+    assert c3 == pytest.approx(3.0 * c1, rel=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_eq15_gradient_matches_autodiff(seed):
+    rng = np.random.default_rng(seed)
+    M = 15
+    lams = rng.gamma(2.0, 1.0, M)
+    w1 = rng.uniform(0.05, 0.95, M)
+    args = (10.0, 12.0, 0.4, 0.6, 1.0)
+    g_auto = jax.grad(C.tandem_both_cost)(
+        jnp.asarray(w1), jnp.asarray(lams), *args)
+    g_hand = C.tandem_both_grad(w1, lams, *args)
+    # f32 autodiff vs f64 hand formula: tolerance at f32 level
+    np.testing.assert_allclose(np.asarray(g_auto), g_hand, rtol=3e-3,
+                               atol=3e-4)
+
+
+def test_tandem_both_beta0_recovers_leaf_only_regime():
+    """β=0 (no parent arrivals) must reduce (14) to the leaf-only tandem
+    of (11) — costs agree at the respective optima."""
+    rng = np.random.default_rng(5)
+    lams = rng.gamma(2.0, 1.0, 30)
+    k1 = k2 = 20.0
+    h = 0.8
+    w1, c14 = C.solve_tandem_both(lams, k1, k2, h, beta=0.0, gamma=1.0,
+                                  iters=8000, lr=0.1)
+    # (11) with caches [k1,k2], hs [0,h], and an unreachable repository
+    spec = C.ChainSpec(ks=(k1, k2), hs=(0.0, h), h_repo=1e9, gamma=1.0)
+    _, c11, _ = C.solve_chain_thresholds(lams, spec)
+    assert c14 == pytest.approx(c11, rel=2e-2)
+
+
+def test_shifted_tessellation_closed_form_vs_numeric():
+    for h in (0.0, 0.01, 0.03, 0.08):
+        cf = C.shifted_tessellation_cost(k=100, h=h, area=1.0, lam=1.0)
+        nm = C.shifted_tessellation_cost_numeric(k=100, h=h, area=1.0,
+                                                 lam=1.0, gamma=1.0)
+        assert cf == pytest.approx(nm, rel=2e-3)
+
+
+def test_shifted_tessellation_no_forwarding_beyond_r():
+    """h > r ⇒ z = 0 ⇒ the parent provides no help to leaf arrivals
+    (the paper: 'if h > r requests are not forwarded')."""
+    k, area = 64, 1.0
+    r = np.sqrt(area / (2 * k))
+    base = C.shifted_tessellation_cost(k, h=r * 1.01, area=area, lam=1.0)
+    plain = 2.0 * k * C.cell_cost(r, 1.0, 1.0)
+    assert base == pytest.approx(plain)
+
+
+def test_shifted_beats_aligned_tessellation():
+    """Fig 2's point: shifting the parent tessellation strictly reduces
+    the cost whenever h < r (corner regions get cheaper service)."""
+    k, area, h = 100, 1.0, 0.02
+    shifted = C.shifted_tessellation_cost(k, h, area, 1.0)
+    r = np.sqrt(area / (2 * k))
+    aligned = 2.0 * k * C.cell_cost(r, 1.0, 1.0)   # parent mirrors leaf ⇒ no help
+    assert shifted < aligned

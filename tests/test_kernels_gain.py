@@ -1,0 +1,64 @@
+"""Per-kernel validation: GREEDY gain Pallas kernel vs oracle + vs the
+host-side objective.Instance.add_gain_all reference."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import catalog, demand, topology
+from repro.core.objective import Instance
+from repro.kernels.gain import gain_ref, greedy_gain
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 1, 2, 1), (100, 50, 4, 2), (300, 300, 64, 3), (33, 17, 2, 5),
+    (256, 512, 128, 2),
+])
+@pytest.mark.parametrize("metric", ["l1", "l2"])
+def test_gain_matches_ref(shape, metric):
+    R, O, D, J = shape
+    rng = np.random.default_rng(R + O)
+    x = jnp.asarray(rng.standard_normal((R, D)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((O, D)).astype(np.float32))
+    lam = jnp.asarray(rng.random(R).astype(np.float32))
+    cur = jnp.asarray((rng.random(R) * 4).astype(np.float32))
+    h = rng.random((R, J)).astype(np.float32)
+    h[0, 0] = np.inf                      # off-path entry
+    hj = jnp.asarray(h)
+    g = greedy_gain(x, y, lam, cur, hj, metric=metric)
+    gr = gain_ref(x, y, lam, cur,
+                  jnp.where(jnp.isfinite(hj), hj, 1e30), metric)
+    np.testing.assert_allclose(g, gr, rtol=5e-5, atol=5e-5)
+
+
+def test_gain_kernel_agrees_with_objective_reference():
+    """Kernel gain == Instance.add_gain_all on a real grid instance."""
+    cat = catalog.grid(L=8)
+    net = topology.tandem(k_leaf=3, k_parent=3, h=2.0, h_repo=10.0)
+    dem = demand.gaussian_grid(cat, sigma=2.0)
+    inst = Instance(net=net, cat=cat, dem=dem)
+    cur = np.repeat(inst.net.h_repo[:, None], cat.n, axis=1)
+    ref = inst.add_gain_all(cur)                        # (O, J) host path
+    # kernel path: flatten (ingress, object) requests
+    x = jnp.asarray(cat.coords)
+    lam = jnp.asarray(inst.lam[0].astype(np.float32))
+    curj = jnp.asarray(cur[0].astype(np.float32))
+    hreq = jnp.asarray(np.broadcast_to(inst.net.H[0], (cat.n, 2)).copy())
+    g = greedy_gain(x, x, lam, curj, hreq, metric="l1", gamma=1.0)
+    np.testing.assert_allclose(np.asarray(g), ref, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(r=st.integers(1, 60), o=st.integers(1, 60), d=st.integers(1, 20),
+       j=st.integers(1, 4))
+def test_gain_property_sweep(r, o, d, j):
+    rng = np.random.default_rng(r * 7919 + o * 31 + d)
+    x = jnp.asarray(rng.uniform(-3, 3, (r, d)).astype(np.float32))
+    y = jnp.asarray(rng.uniform(-3, 3, (o, d)).astype(np.float32))
+    lam = jnp.asarray(rng.random(r).astype(np.float32))
+    cur = jnp.asarray((rng.random(r) * 3).astype(np.float32))
+    h = jnp.asarray(rng.random((r, j)).astype(np.float32))
+    g = greedy_gain(x, y, lam, cur, h, metric="l1", br=32, bo=32)
+    gr = gain_ref(x, y, lam, cur, h, "l1")
+    np.testing.assert_allclose(g, gr, rtol=5e-5, atol=5e-5)
+    assert np.all(np.asarray(g) >= 0.0)   # gains are relu-clamped

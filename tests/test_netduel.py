@@ -1,0 +1,55 @@
+"""Unit tests for NETDUEL (§5): duel mechanics and λ-unawareness."""
+import numpy as np
+
+from repro.core import catalog, demand, topology
+from repro.core.objective import Instance, random_slots
+from repro.core.placement import netduel
+
+
+def small_instance(L=12, k=6, h=1.5, h_repo=15.0, sigma=None):
+    cat = catalog.grid(L=L)
+    net = topology.tandem(k_leaf=k, k_parent=k, h=h, h_repo=h_repo)
+    dem = demand.gaussian_grid(cat, sigma=sigma or L / 6)
+    return Instance(net=net, cat=cat, dem=dem)
+
+
+def test_netduel_improves_over_random_init():
+    inst = small_instance()
+    rng = np.random.default_rng(0)
+    slots0 = random_slots(inst, rng)
+    c0 = inst.total_cost(slots0)
+    st = netduel(inst, n_iters=30000, seed=0, slots0=slots0,
+                 window=1000, arm_prob=0.3)
+    assert st.n_promotions > 0
+    assert st.sw.cost(inst) < c0 * 0.7, (c0, st.sw.cost(inst))
+
+
+def test_netduel_is_lambda_unaware():
+    """The policy must behave identically given the same request STREAM,
+    regardless of which demand object generated it (it never reads λ)."""
+    inst_a = small_instance(sigma=2.0)
+    inst_b = small_instance(sigma=6.0)     # different λ, same topology
+    rng = np.random.default_rng(1)
+    objs, ings = inst_a.dem.sample(8000, rng)
+    st_a = netduel(inst_a, requests=(objs, ings), seed=3, window=800)
+    st_b = netduel(inst_b, requests=(objs, ings), seed=3, window=800)
+    np.testing.assert_array_equal(st_a.sw.slots, st_b.sw.slots)
+
+
+def test_netduel_virtual_never_stored_before_promotion():
+    """Virtual objects are metadata only: the cache contents may only
+    change at a promotion event (duel settle), never at arming."""
+    inst = small_instance()
+    rng = np.random.default_rng(2)
+    slots0 = random_slots(inst, rng)
+    st = netduel(inst, n_iters=500, seed=0, slots0=slots0,
+                 window=10_000, arm_prob=1.0)   # duels never expire
+    np.testing.assert_array_equal(st.sw.slots, slots0)
+    assert st.n_promotions == 0
+
+
+def test_netduel_tracks_serving_cost():
+    inst = small_instance()
+    st = netduel(inst, n_iters=5000, seed=4, window=500)
+    assert st.n_served == 5000
+    assert st.served_cost / st.n_served <= inst.empty_cost() + 1e-9

@@ -1,0 +1,115 @@
+"""End-to-end behaviour tests for the paper's system: placement control
+plane → runtime cache network → model serving, plus the training loop.
+
+(The per-subsystem suites live in the sibling test modules; this file
+exercises the composed system the way examples/ do, with assertions.)
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import catalog, demand, topology
+from repro.core.objective import Instance
+from repro.core.placement import greedy, greedy_then_localswap, localswap
+from repro.core.simcache import SimCacheNetwork
+from repro.configs.registry import get_smoke_config
+from repro.data.pipeline import SyntheticLMData
+from repro.models import model as model_api
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, train
+
+
+def test_placement_to_dataplane_roundtrip():
+    """Offline C(A) == empirical cost of the runtime cache serving the
+    full demand-weighted request set (eq. (2) both ways)."""
+    cat = catalog.grid(L=20)
+    net = topology.tandem(k_leaf=12, k_parent=12, h=3.0, h_repo=25.0)
+    dem = demand.gaussian_grid(cat, sigma=4.0)
+    inst = Instance(net=net, cat=cat, dem=dem)
+    st = greedy_then_localswap(inst, max_passes=6)
+    offline = st.cost(inst)
+    sc = SimCacheNetwork.from_placement(
+        cat.coords, st.slots, inst.slot_cache, hs=[0.0, 3.0], h_repo=25.0,
+        metric="l1", gamma=1.0)
+    res = sc.lookup(jnp.asarray(cat.coords))
+    empirical = float(np.sum(dem.lam[0] * np.asarray(res.cost)))
+    assert abs(empirical - offline) < 1e-3 * max(offline, 1.0)
+    # and the allocation actually beats no cache
+    assert offline < inst.empty_cost() * 0.25
+
+
+def test_full_pipeline_cost_ordering():
+    """Across algorithms, the end-to-end ordering of Fig 3 holds on a
+    fresh instance (cascade ≤ greedy; localswap close)."""
+    cat = catalog.grid(L=16)
+    net = topology.tandem(k_leaf=8, k_parent=8, h=2.0, h_repo=20.0)
+    dem = demand.gaussian_grid(cat, sigma=3.0)
+    inst = Instance(net=net, cat=cat, dem=dem)
+    c_greedy = inst.total_cost(greedy(inst))
+    c_ls = localswap(inst, n_iters=6000, seed=0).cost(inst)
+    c_casc = greedy_then_localswap(inst, max_passes=6).cost(inst)
+    assert c_casc <= c_greedy + 1e-9
+    assert c_ls <= c_greedy * 1.05
+
+
+def test_train_then_serve_smoke(tmp_path):
+    """Train a tiny LM a few steps, then serve it behind the cache
+    network — the full framework path in one test."""
+    cfg = dataclasses.replace(
+        get_smoke_config("granite-3-2b"), n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256)
+    tcfg = TrainConfig(steps=20, ckpt_dir=str(tmp_path), ckpt_every=10,
+                       log_every=100, opt=AdamWConfig(lr=1e-3))
+    data = SyntheticLMData(vocab=cfg.vocab, batch=4, seq=32)
+    out = train(cfg, tcfg, data, log=lambda *a: None)
+    assert np.isfinite(out["losses"][-1])
+
+    from repro.core import catalog as catalog_api
+    from repro.serve import EngineConfig, SimCacheEngine
+    cat = catalog_api.embedding_catalog(n=200, dim=8, seed=0)
+    eng = SimCacheEngine(cfg, out["params"],
+                         EngineConfig(k_device=8, k_pod=16, k_global=16,
+                                      h_ici=1.0, h_dcn=5.0, h_model=50.0),
+                         cat.coords)
+    rng = np.random.default_rng(0)
+    dem = demand.zipf(cat, alpha=1.2, seed=1)
+    for _ in range(4):
+        ids, _ = dem.sample(8, rng)
+        prompts = jnp.asarray(rng.integers(0, cfg.vocab, (8, 8)),
+                              dtype=jnp.int32)
+        eng.serve(ids, prompts)
+    eng.refresh_placement()
+    eng.stats = type(eng.stats)()
+    for _ in range(6):
+        ids, _ = dem.sample(8, rng)
+        prompts = jnp.asarray(rng.integers(0, cfg.vocab, (8, 8)),
+                              dtype=jnp.int32)
+        eng.serve(ids, prompts)
+    assert eng.stats.hit_rate > 0.3
+    assert eng.stats.mean_cost < 50.0           # beats all-repository
+
+
+def test_int8_kv_decode_close_to_bf16():
+    """The int8 KV cache (serving memory optimization, §Perf cell C)
+    decodes within quantization tolerance of the bf16 cache."""
+    cfg = get_smoke_config("granite-3-2b")
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    params = model_api.init_params(cfg, 0)
+    rng = np.random.default_rng(1)
+    B, S = 2, 24
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
+    import jax
+    from repro.models import transformer
+    full, _, _ = transformer.forward(cfg, params, {"tokens": toks},
+                                     mode="train")
+    Sp = S - 4
+    _, caches = jax.jit(model_api.make_prefill(cfg8))(
+        params, {"tokens": toks[:, :Sp]})
+    caches = model_api._pad_caches(cfg8, caches, S)
+    step = jax.jit(model_api.make_serve_step(cfg8))
+    errs = []
+    for t in range(4):
+        lg, caches = step(params, toks[:, Sp + t:Sp + t + 1], caches, Sp + t)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, Sp + t]))))
+    assert max(errs) < 0.05, errs

@@ -1,0 +1,153 @@
+"""Paper §3.4 toy example, reproduced exactly.
+
+Five contents x1..x5 with C_a(x2,x3)=C_a(x3,x4)=0,
+C_a(x1,x2)=C_a(x4,x5)=ε, all other pairs ∞ (costs symmetric).
+λ3 > λ2 = λ4 > λ1 = λ5, repository cost h_s > 2ε.
+
+Claims verified:
+  1. single cache k=2: optimum {x2,x4}; GREEDY reaches {x3, x} with
+     x ∈ {x1,x5} and is NOT locally optimal; LOCALSWAP reaches {x2,x4}.
+  2. tandem k=1+1, h(1,2) small: optimal {(x4,1),(x2,2)} / {(x2,1),(x4,2)};
+     GREEDY still picks x3 at the leaf; LocalSwap reaches an optimum.
+  3. the paper's numeric regime h_s=1, h(1,2)=ε=4/9, λ=(1,4/3,·,4/3,1):
+     {(x3,1),(x1/5,2)} are global minima, {(x4,1),(x2,2)}-type states are
+     local minima; GREEDY finds a global optimum.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import catalog, demand, topology
+from repro.core.objective import Instance
+from repro.core.placement import greedy, localswap, localswap_polish
+from repro.core.placement.localswap import is_locally_optimal
+
+BIG = np.float32(1e9)   # stand-in for the paper's infinite cost
+
+
+def toy_ca(eps: float) -> np.ndarray:
+    ca = np.full((5, 5), BIG, dtype=np.float32)
+    np.fill_diagonal(ca, 0.0)
+    for (i, j, v) in [(1, 2, 0.0), (2, 3, 0.0), (0, 1, eps), (3, 4, eps)]:
+        ca[i, j] = ca[j, i] = v
+    return ca
+
+
+def make_instance(net, lam_rows, eps):
+    cat = catalog.Catalog(coords=np.zeros((5, 1), np.float32))
+    lam = np.asarray(lam_rows, dtype=np.float64)
+    dem = demand.Demand(lam=lam / lam.sum())
+    return Instance(net=net, cat=cat, dem=dem, ca_matrix=toy_ca(eps))
+
+
+def brute_force_best(inst):
+    best, arg = np.inf, None
+    K = inst.net.total_slots
+    for combo in itertools.product(range(5), repeat=K):
+        c = inst.total_cost(np.array(combo, dtype=np.int64))
+        if c < best - 1e-12:
+            best, arg = c, combo
+    return best, arg
+
+
+class TestSingleCache:
+    eps = 0.25
+    lam = [[1.0, 4 / 3, 2.0, 4 / 3, 1.0]]
+
+    def _inst(self):
+        net = topology.single_cache(k=2, h_repo=1.0)  # h_s = 1 > 2ε
+        return make_instance(net, self.lam, self.eps)
+
+    def test_optimum_is_x2_x4(self):
+        inst = self._inst()
+        best, arg = brute_force_best(inst)
+        assert sorted(arg) == [1, 3]
+
+    def test_greedy_reaches_x3_plus_edge(self):
+        inst = self._inst()
+        slots = sorted(greedy(inst).tolist())
+        assert slots in ([0, 2], [2, 4])
+
+    def test_greedy_not_locally_optimal(self):
+        inst = self._inst()
+        assert not is_locally_optimal(inst, greedy(inst))
+
+    def test_localswap_reaches_unique_local_optimum(self):
+        inst = self._inst()
+        st = localswap(inst, n_iters=4000, seed=3)
+        assert sorted(st.slots.tolist()) == [1, 3]
+        assert is_locally_optimal(inst, st.slots)
+
+    def test_cost_ordering(self):
+        inst = self._inst()
+        g = inst.total_cost(greedy(inst))
+        ls = localswap(inst, n_iters=4000, seed=0).cost(inst)
+        assert ls < g
+
+
+class TestTandemSmallH:
+    """Tandem, h(1,2) small: optimal keeps the {x2,x4} structure split
+    across the two caches; GREEDY still anchors on x3."""
+    eps = 0.25
+    h12 = 0.05
+    lam = [[1.0, 4 / 3, 2.0, 4 / 3, 1.0]]
+
+    def _inst(self):
+        net = topology.tandem(k_leaf=1, k_parent=1, h=self.h12,
+                              h_repo=1.0 + self.h12)
+        return make_instance(net, self.lam, self.eps)
+
+    def test_optimal_structure(self):
+        inst = self._inst()
+        _, arg = brute_force_best(inst)
+        assert sorted(arg) == [1, 3]
+
+    def test_greedy_keeps_x3_at_leaf(self):
+        inst = self._inst()
+        slots = greedy(inst)
+        assert slots[0] == 2              # x3 at the leaf cache
+        assert slots[1] in (0, 4)
+
+    def test_localswap_reaches_optimum(self):
+        inst = self._inst()
+        st = localswap(inst, n_iters=6000, seed=1)
+        best, _ = brute_force_best(inst)
+        assert st.cost(inst) == pytest.approx(best, abs=1e-9)
+
+
+class TestPaperNumericRegime:
+    """h_s=1, h(1,2)=ε=4/9, λ1=λ5=1, λ2=λ4=4/3, λ3=2 (> λ2): the paper
+    states {(x3,1),(x1,2)}/{(x3,1),(x5,2)} are global minima while the
+    {(x2/x4)} configurations are only local minima; GREEDY succeeds."""
+    eps = 4.0 / 9.0
+    lam = [[1.0, 4 / 3, 2.0, 4 / 3, 1.0]]
+
+    def _inst(self):
+        net = topology.tandem(k_leaf=1, k_parent=1, h=self.eps,
+                              h_repo=1.0 + self.eps)
+        return make_instance(net, self.lam, self.eps)
+
+    def test_global_minimum_is_x3_based(self):
+        inst = self._inst()
+        _, arg = brute_force_best(inst)
+        assert arg[0] == 2 and arg[1] in (0, 4)
+
+    def test_x2_x4_state_is_local_minimum(self):
+        inst = self._inst()
+        slots = np.array([3, 1], dtype=np.int64)      # (x4 leaf, x2 parent)
+        assert is_locally_optimal(inst, slots)
+        best, _ = brute_force_best(inst)
+        assert inst.total_cost(slots) > best + 1e-6   # ...but not global
+
+    def test_greedy_finds_global(self):
+        inst = self._inst()
+        best, _ = brute_force_best(inst)
+        assert inst.total_cost(greedy(inst)) == pytest.approx(best, abs=1e-9)
+
+    def test_localswap_can_stick_at_local_minimum(self):
+        inst = self._inst()
+        st = localswap_polish(inst, np.array([3, 1], dtype=np.int64))
+        # started at the local min, polish must not escape (it's a fixed point)
+        assert sorted(st.slots.tolist()) == [1, 3]
+        assert st.n_swaps == 0
