@@ -37,6 +37,17 @@ def timed(fn, *args, repeat: int = 1, **kw):
     return out, dt
 
 
+def bench_jax(fn, *args, repeat: int = 3, **kw) -> float:
+    """Steady-state seconds/call for a jax computation: one warmup call
+    (trace + compile), then block_until_ready-timed repeats."""
+    import jax
+    jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / repeat
+
+
 def tandem_instance(L: int, sigma: float, h: float, k: int,
                     h_repo: float, gamma: float = 1.0) -> Instance:
     """The paper's §6.1 setup: L×L grid, Gaussian demand, tandem network."""

@@ -18,15 +18,17 @@ Reproduced claims:
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_line, save_json, timed
+from benchmarks.common import bench_jax, csv_line, save_json, timed
 from repro.core import catalog as catalog_api
 from repro.core import demand as demand_api
 from repro.core import topology
 from repro.core.objective import Instance
 from repro.core.placement import localswap
 from repro.core.placement.localswap import constrained_localswap
+from repro.core.simcache import SimCacheNetwork
 
 
 def build_instance(n_items: int = 4000, dim: int = 100, h: float = 150.0,
@@ -80,6 +82,23 @@ def run(n_items: int = 4000, k: int = 100, h: float = 150.0,
     csv_line("fig78/unconstrained", tl * 1e6, f"cost={cost_u:.2f}")
     out["checks"]["leaf stores popular-or-central"] = \
         out["fig7_unconstrained"]["frac_leaf_popular_or_central"] > 0.5
+
+    # data-plane timing on this trace: serve the full catalog as a query
+    # batch through the runtime cache network, fused single-kernel
+    # lookup vs the per-level looped reference
+    mk = lambda fused: SimCacheNetwork.from_placement(       # noqa: E731
+        inst.cat.coords, ls.slots, inst.slot_cache,
+        hs=[0.0, h], h_repo=1000.0, metric=inst.cat.metric,
+        gamma=inst.cat.gamma, fused=fused)
+    q = jnp.asarray(inst.cat.coords)
+    nf, nl = mk(True), mk(False)
+    t_fused = bench_jax(lambda: nf.lookup(q).cost)
+    t_loop = bench_jax(lambda: nl.lookup(q).cost)
+    out["fused_lookup"] = {"fused_us": t_fused * 1e6,
+                           "looped_us": t_loop * 1e6,
+                           "speedup": t_loop / t_fused}
+    csv_line(f"fig78/fused_lookup/Q{n_items}", t_fused * 1e6,
+             f"looped_us={t_loop*1e6:.1f},speedup={t_loop/t_fused:.2f}x")
 
     # Fig 7 right: constrained variant, sweep d*
     slot_cache = inst.slot_cache

@@ -4,25 +4,14 @@ plausibility anchor, not TPU performance).
 """
 from __future__ import annotations
 
-import time
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import bench_jax as _bench
 from benchmarks.common import csv_line, save_json
+from repro.core.simcache import CacheLevel, SimCacheNetwork
 from repro.kernels.gain import greedy_gain
 from repro.kernels.knn import nearest_approximizer
-
-
-def _bench(fn, *args, repeat=3, **kw):
-    out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(repeat):
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / repeat
 
 
 def run() -> dict:
@@ -39,6 +28,30 @@ def run() -> dict:
         rows.append({"name": name, "us": dt * 1e6,
                      "gflops": flops / dt / 1e9})
         csv_line(name, dt * 1e6, f"gflops={flops/dt/1e9:.1f}")
+    # fused network-wide lookup (one pallas_call) vs the per-level loop:
+    # the O(L) kernel-launch + host stack/argmin overhead it removes
+    # grows with depth, so the speedup is reported per level count.
+    # K_j = 64 is the engine's device-level slot count — each looped
+    # launch pads its level to the 256-key block alone, while the fused
+    # scan pads the ΣK_j concatenation once.
+    for L in (2, 4, 8):
+        Q, Kj, D = 512, 64, 64
+        levels = [CacheLevel(
+            keys=jnp.asarray(rng.standard_normal((Kj, D))
+                             .astype(np.float32)),
+            values=jnp.asarray(rng.integers(0, 10_000, Kj)
+                               .astype(np.int32)),
+            h=0.1 * j) for j in range(L)]
+        q = jnp.asarray(rng.standard_normal((Q, D)).astype(np.float32))
+        net = SimCacheNetwork(levels=levels, h_repo=5.0, metric="l2")
+        t_fused = _bench(lambda x: net._lookup_fused(x).cost, q)
+        t_loop = _bench(lambda x: net._lookup_looped(x).cost, q)
+        name = f"fused_lookup/L{L}_Q{Q}_K{Kj}_D{D}_l2"
+        rows.append({"name": name, "us": t_fused * 1e6,
+                     "looped_us": t_loop * 1e6,
+                     "speedup": t_loop / t_fused})
+        csv_line(name, t_fused * 1e6,
+                 f"looped_us={t_loop*1e6:.1f},speedup={t_loop/t_fused:.2f}x")
     for (R, O, D, J) in [(2048, 2048, 128, 3)]:
         x = jnp.asarray(rng.standard_normal((R, D)).astype(np.float32))
         y = jnp.asarray(rng.standard_normal((O, D)).astype(np.float32))

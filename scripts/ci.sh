@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verification, exactly as ROADMAP.md specifies. pytest exits
+# non-zero on collection errors (e.g. a missing optional dependency
+# breaking an import at collection time), so this script fails fast on
+# the class of regression that once left five modules uncollectable.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -x -q "$@"

@@ -8,9 +8,14 @@ blob or a KV-prefix handle in the serving engine).
 
 ``lookup`` realizes eq. (1): every request is served by the approximizer
 minimizing C_a(o, o') + h(i, j) over the caches on its path plus the
-repository — the paper's optimal-forwarding assumption, implemented as
-the metadata probe of DESIGN.md §2 (per-level KNN minima compared
-centrally; on a real mesh the per-level minima are tiny all-gathers).
+repository — the paper's optimal-forwarding assumption. The default
+(``fused=True``) path concatenates every level's keys into one segmented
+tensor with per-key additive cost offsets and answers the network-wide
+query with a *single* Pallas kernel launch (the repository rides along
+as a virtual key), so a batch lookup is one jitted pallas_call with no
+per-level Python loop, host-side stack, or argmin. ``fused=False`` keeps
+the original per-level probe (one KNN kernel per level, minima compared
+centrally) as the differential-testing reference.
 """
 from __future__ import annotations
 
@@ -21,9 +26,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.knn import nearest_approximizer
+from repro.kernels.knn import fused_lookup, nearest_approximizer
 
 REPO_LEVEL = -1
+
+# Empty-level sentinel coordinate: far enough that a sentinel can never
+# undercut the repository, small enough that its *squared* l2 distance
+# (~1e30) stays finite in f32 — the old 1e30 sentinel overflowed l2sq to
+# inf (and could reach NaN via inf−inf in the dot-product expansion).
+# The fused kernel additionally masks sentinel keys explicitly via the
+# valid flag (payload == −1 semantics), so it never relies on magnitude.
+SENTINEL_COORD = 1e15
 
 
 @dataclasses.dataclass
@@ -51,13 +64,16 @@ class SimCacheNetwork:
     metric: str = "l2"
     gamma: float = 1.0
     use_pallas: bool = True
+    fused: bool = True
+    _layout: tuple | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     @classmethod
     def from_placement(cls, coords: np.ndarray, slots: np.ndarray,
                        slot_cache: np.ndarray, hs: Sequence[float],
                        h_repo: float, metric: str = "l2",
-                       gamma: float = 1.0, use_pallas: bool = True
-                       ) -> "SimCacheNetwork":
+                       gamma: float = 1.0, use_pallas: bool = True,
+                       fused: bool = True) -> "SimCacheNetwork":
         """Build the runtime network from a placement-algorithm output.
 
         ``slots``/``slot_cache`` are the flat allocation of
@@ -69,9 +85,9 @@ class SimCacheNetwork:
             idx = slots[slot_cache == j]
             idx = idx[idx >= 0]
             if idx.size == 0:           # empty cache level still valid
-                keys = np.zeros((1, coords.shape[1]), np.float32)
+                keys = np.full((1, coords.shape[1]), SENTINEL_COORD,
+                               np.float32)     # unreachable sentinel key
                 vals = np.full((1,), -1, np.int64)
-                keys[:] = np.float32(1e30)   # unreachable sentinel key
             else:
                 keys = coords[idx].astype(np.float32)
                 vals = idx
@@ -79,10 +95,69 @@ class SimCacheNetwork:
                                      values=jnp.asarray(vals, jnp.int32),
                                      h=float(h)))
         return cls(levels=levels, h_repo=float(h_repo), metric=metric,
-                   gamma=gamma, use_pallas=use_pallas)
+                   gamma=gamma, use_pallas=use_pallas, fused=fused)
+
+    # ------------------------------------------------------- fused layout
+    def fused_layout(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Concatenated (keys, h_key, meta) over all levels, memoized.
+
+        ``meta`` is (4, ΣK_j) i32 with rows (level, slot, payload,
+        valid); sentinel entries of empty levels keep payload == −1 and
+        valid == 0 so the kernel masks them explicitly.
+
+        Memoized: mutating ``levels`` after the first lookup requires
+        :meth:`invalidate_layout`, or the fused path keeps serving the
+        stale concatenation.
+        """
+        if self._layout is None:
+            keys, h_key, metas = [], [], []
+            for j, lv in enumerate(self.levels):
+                kj = lv.keys.shape[0]
+                vals = np.asarray(lv.values, np.int32)
+                keys.append(np.asarray(lv.keys, np.float32))
+                h_key.append(np.full((kj,), lv.h, np.float32))
+                metas.append(np.stack([
+                    np.full((kj,), j, np.int32),
+                    np.arange(kj, dtype=np.int32),
+                    vals,
+                    (vals >= 0).astype(np.int32),
+                ]))
+            d = self.levels[0].keys.shape[1] if self.levels else 1
+            cat = (np.concatenate(keys, 0) if keys
+                   else np.zeros((0, d), np.float32))
+            hk = (np.concatenate(h_key) if h_key
+                  else np.zeros((0,), np.float32))
+            mt = (np.concatenate(metas, 1) if metas
+                  else np.zeros((4, 0), np.int32))
+            self._layout = (jnp.asarray(cat), jnp.asarray(hk),
+                            jnp.asarray(mt))
+        return self._layout
+
+    def invalidate_layout(self) -> None:
+        """Drop the memoized fused layout after mutating ``levels``."""
+        self._layout = None
 
     def lookup(self, queries: jax.Array) -> LookupResult:
-        """Serve a batch of query embeddings (B, d) per eq. (1)."""
+        """Serve a batch of query embeddings (B, d) per eq. (1).
+
+        Fused (default): one pallas_call over the segmented key tensor.
+        Looped (``fused=False``): one KNN kernel per level + central
+        argmin — kept as the reference for differential tests.
+        """
+        if self.fused:
+            return self._lookup_fused(queries)
+        return self._lookup_looped(queries)
+
+    def _lookup_fused(self, queries: jax.Array) -> LookupResult:
+        keys, h_key, meta = self.fused_layout()
+        cost, ca, lvl, slot, pay = fused_lookup(
+            queries, keys, h_key, meta, metric=self.metric,
+            gamma=self.gamma, h_repo=self.h_repo, repo_level=REPO_LEVEL,
+            use_pallas=self.use_pallas)
+        return LookupResult(level=lvl, slot=slot, payload=pay, cost=cost,
+                            approx_cost=ca, hit=lvl != REPO_LEVEL)
+
+    def _lookup_looped(self, queries: jax.Array) -> LookupResult:
         B = queries.shape[0]
         costs, slots_, pays, appr = [], [], [], []
         for lv in self.levels:

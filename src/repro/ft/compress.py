@@ -19,6 +19,19 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 
+def axis_size(axis_name: str) -> jax.Array | int:
+    """Size of a named mesh axis, from inside shard_map/vmap/pmap.
+
+    ``jax.lax.axis_size`` was removed from the installed JAX; a psum of
+    ones over the axis is the portable spelling (constant-folded at
+    trace time).
+    """
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Per-row (trailing dim) symmetric int8 quantization."""
     xf = x.astype(jnp.float32)
@@ -36,7 +49,6 @@ def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
 
 def _crosspod_leaf(g: jax.Array, pod_axis: str) -> jax.Array:
     """Mean over the pod axis with int8 exchange (inside shard_map)."""
-    n_pods = jax.lax.axis_size(pod_axis)
     q, s = quantize_int8(g)
     # all_gather the quantized payload + scales (int8 over DCN), then
     # dequantize-and-mean locally

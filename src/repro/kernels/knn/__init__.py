@@ -1,4 +1,6 @@
-from repro.kernels.knn.ops import nearest_approximizer, pad_for_knn
-from repro.kernels.knn.ref import knn_ref
+from repro.kernels.knn.ops import (fused_lookup, nearest_approximizer,
+                                   pad_for_knn)
+from repro.kernels.knn.ref import fused_lookup_ref, knn_ref
 
-__all__ = ["nearest_approximizer", "pad_for_knn", "knn_ref"]
+__all__ = ["nearest_approximizer", "pad_for_knn", "knn_ref",
+           "fused_lookup", "fused_lookup_ref"]

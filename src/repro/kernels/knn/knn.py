@@ -77,6 +77,124 @@ def _knn_kernel(q_ref, k_ref, mind_ref, argm_ref, *, bk: int, metric: str,
     argm_ref[...] = jnp.where(better, local_arg, argm_ref[...])
 
 
+def _select_at(idx_col, block, fill):
+    """Per-row pick block[i, idx_col[i]] via a one-hot reduce (MXU/VPU
+    friendly; no dynamic gather inside the kernel)."""
+    onehot = jax.lax.broadcasted_iota(
+        jnp.int32, block.shape, 1) == idx_col          # (BQ, BK)
+    return jnp.sum(jnp.where(onehot, block, fill), axis=1, keepdims=True)
+
+
+def _fused_kernel(q_ref, k_ref, hk_ref, meta_ref,
+                  cost_ref, ca_ref, lvl_ref, slot_ref, pay_ref,
+                  *, nk: int, metric: str, gamma: float, h_repo: float,
+                  repo_level: int):
+    """Segmented 1-NN over the concatenation of all cache levels.
+
+    Per key tile we get, besides the (BK, D) key block, a (1, BK) f32 row
+    of additive level costs h(level(k)) and a (4, BK) i32 metadata block
+    (rows: level id, slot within level, payload id, valid flag). Sentinel
+    / padding keys carry valid == 0 and are masked to +INF *explicitly* —
+    their distances may be inf/NaN (e.g. an f32-overflowing sentinel
+    coordinate under l2sq) and must never reach the min.
+
+    The repository is the virtual key folded in on the last key tile:
+    cost h_repo, C_a = 0, level = repo_level, slot = 0, payload = −1. It
+    wins only on strict improvement, so a cache tying h_repo serves the
+    request — the same tie-break as argmin over [levels…, repo].
+    """
+    kt = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    ca = _distance_block(q, k, metric)
+    if gamma != 1.0:
+        ca = jnp.power(jnp.maximum(ca, 0.0), gamma)
+    meta = meta_ref[...]                               # (4, BK) int32
+    valid = (meta[3, :] > 0)[None, :]                  # (1, BK)
+    cost = jnp.where(valid, ca + hk_ref[...], _INF)    # (BQ, BK)
+    local_min = jnp.min(cost, axis=1, keepdims=True)   # (BQ, 1)
+    local_arg = jnp.argmin(cost, axis=1).astype(jnp.int32)[:, None]
+
+    @pl.when(kt == 0)
+    def _init():
+        cost_ref[...] = jnp.full_like(cost_ref, _INF)
+        ca_ref[...] = jnp.zeros_like(ca_ref)
+        lvl_ref[...] = jnp.full_like(lvl_ref, repo_level)
+        slot_ref[...] = jnp.zeros_like(slot_ref)
+        pay_ref[...] = jnp.full_like(pay_ref, -1)
+
+    bcast = jnp.zeros(local_arg.shape, jnp.int32)      # (BQ, 1) index col
+    better = local_min < cost_ref[...]
+    cost_ref[...] = jnp.where(better, local_min, cost_ref[...])
+    ca_ref[...] = jnp.where(
+        better, _select_at(local_arg, jnp.where(valid, ca, 0.0), 0.0),
+        ca_ref[...])
+    lvl_ref[...] = jnp.where(
+        better, _select_at(local_arg, meta[0:1, :] + bcast, 0), lvl_ref[...])
+    slot_ref[...] = jnp.where(
+        better, _select_at(local_arg, meta[1:2, :] + bcast, 0), slot_ref[...])
+    pay_ref[...] = jnp.where(
+        better, _select_at(local_arg, meta[2:3, :] + bcast, 0), pay_ref[...])
+
+    @pl.when(kt == nk - 1)
+    def _repo():
+        use_repo = h_repo < cost_ref[...]
+        cost_ref[...] = jnp.where(use_repo, h_repo, cost_ref[...])
+        ca_ref[...] = jnp.where(use_repo, 0.0, ca_ref[...])
+        lvl_ref[...] = jnp.where(use_repo, repo_level, lvl_ref[...])
+        slot_ref[...] = jnp.where(use_repo, 0, slot_ref[...])
+        pay_ref[...] = jnp.where(use_repo, -1, pay_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "metric", "gamma", "h_repo", "repo_level", "bq", "bk", "interpret"))
+def fused_lookup_pallas(queries: jax.Array, keys: jax.Array,
+                        h_key: jax.Array, meta: jax.Array,
+                        metric: str = "l2", gamma: float = 1.0,
+                        h_repo: float = 0.0, repo_level: int = -1,
+                        bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                        interpret: bool = True) -> tuple[jax.Array, ...]:
+    """Fused multi-level 1-NN: one pallas_call over ΣK_j concatenated
+    keys, minimizing C_a(q, k)^γ + h(level(k)) with the repository folded
+    in as a virtual key. Inputs must be pre-padded (Q % bq == 0,
+    K % bk == 0; padding keys carry meta valid == 0).
+
+    ``h_key`` is (1, K) f32; ``meta`` is (4, K) i32 with rows
+    (level, slot, payload, valid). Returns per query (cost, approx_cost,
+    level, slot, payload).
+    """
+    Q, D = queries.shape
+    K, _ = keys.shape
+    assert Q % bq == 0 and K % bk == 0, (Q, K, bq, bk)
+    assert h_key.shape == (1, K) and meta.shape == (4, K), \
+        (h_key.shape, meta.shape, K)
+    grid = (Q // bq, K // bk)
+    kernel = functools.partial(
+        _fused_kernel, nk=K // bk, metric=metric, gamma=gamma,
+        h_repo=h_repo, repo_level=repo_level)
+    out_block = pl.BlockSpec((bq, 1), lambda qt, kt: (qt, 0))
+    cost, ca, lvl, slot, pay = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, D), lambda qt, kt: (qt, 0)),
+            pl.BlockSpec((bk, D), lambda qt, kt: (kt, 0)),
+            pl.BlockSpec((1, bk), lambda qt, kt: (0, kt)),
+            pl.BlockSpec((4, bk), lambda qt, kt: (0, kt)),
+        ],
+        out_specs=[out_block] * 5,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, keys, h_key, meta)
+    return cost[:, 0], ca[:, 0], lvl[:, 0], slot[:, 0], pay[:, 0]
+
+
 @functools.partial(jax.jit, static_argnames=(
     "metric", "gamma", "bq", "bk", "interpret"))
 def knn_pallas(queries: jax.Array, keys: jax.Array, metric: str = "l2",

@@ -13,8 +13,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.knn.knn import DEFAULT_BK, DEFAULT_BQ, knn_pallas
-from repro.kernels.knn.ref import knn_ref
+from repro.kernels.knn.knn import (DEFAULT_BK, DEFAULT_BQ,
+                                   fused_lookup_pallas, knn_pallas)
+from repro.kernels.knn.ref import fused_lookup_ref, knn_ref
 
 LANE = 128
 
@@ -70,3 +71,53 @@ def nearest_approximizer(queries: jax.Array, keys: jax.Array,
     mind, argm = knn_pallas(qp, kp, metric=metric, gamma=gamma, bq=bq, bk=bk,
                             interpret=interpret)
     return mind[:nq], argm[:nq]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "metric", "gamma", "h_repo", "repo_level", "bq", "bk", "use_pallas",
+    "interpret"))
+def fused_lookup(queries: jax.Array, keys: jax.Array, h_key: jax.Array,
+                 meta: jax.Array, metric: str = "l2", gamma: float = 1.0,
+                 h_repo: float = 0.0, repo_level: int = -1,
+                 bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                 use_pallas: bool = True, interpret: bool | None = None
+                 ) -> tuple[jax.Array, ...]:
+    """Network-wide nearest-approximizer query, fused.
+
+    ``keys`` (K, d) is the concatenation of every cache level's stored
+    embeddings; ``h_key`` (K,) the per-key retrieval cost h(level(k));
+    ``meta`` (4, K) i32 rows (level, slot, payload, valid). A single
+    blocked scan returns, per query, argmin over all keys *and* the
+    repository (a virtual key with C_a = 0, h = h_repo) of
+    C_a(q, k)^γ + h — eq. (1) as one kernel launch. Returns
+    (cost, approx_cost, level, slot, payload), each (B,).
+    """
+    nq = queries.shape[0]
+    if keys.shape[0] == 0:          # no cache keys at all → repository
+        return (jnp.full((nq,), h_repo, jnp.float32),
+                jnp.zeros((nq,), jnp.float32),
+                jnp.full((nq,), repo_level, jnp.int32),
+                jnp.zeros((nq,), jnp.int32),
+                jnp.full((nq,), -1, jnp.int32))
+    h_row = h_key.reshape(1, -1).astype(jnp.float32)
+    if not use_pallas:
+        return fused_lookup_ref(queries, keys, h_row[0], meta, metric=metric,
+                                gamma=gamma, h_repo=h_repo,
+                                repo_level=repo_level)
+    if interpret is None:
+        interpret = not _on_tpu()
+    qp = _pad_axis(_pad_axis(queries.astype(jnp.float32), LANE, 1, "zero"),
+                   bq, 0, "zero")
+    kp = _pad_axis(_pad_axis(keys.astype(jnp.float32), LANE, 1, "zero"),
+                   bk, 0, "zero")
+    hp = _pad_axis(h_row, bk, 1, "zero")
+    # padded keys get valid == 0, payload == −1 — masked inside the kernel
+    kpad = kp.shape[0] - keys.shape[0]
+    mp = jnp.pad(meta.astype(jnp.int32), ((0, 0), (0, kpad)),
+                 constant_values=0)
+    if kpad:
+        mp = mp.at[2, keys.shape[0]:].set(-1)
+    cost, ca, lvl, slot, pay = fused_lookup_pallas(
+        qp, kp, hp, mp, metric=metric, gamma=gamma, h_repo=h_repo,
+        repo_level=repo_level, bq=bq, bk=bk, interpret=interpret)
+    return cost[:nq], ca[:nq], lvl[:nq], slot[:nq], pay[:nq]

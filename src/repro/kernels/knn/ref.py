@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+_INF = 3.0e38
+
 
 def knn_ref(queries: jnp.ndarray, keys: jnp.ndarray, metric: str = "l2",
             gamma: float = 1.0) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -27,3 +29,42 @@ def knn_ref(queries: jnp.ndarray, keys: jnp.ndarray, metric: str = "l2",
     cost = d if gamma == 1.0 else jnp.power(jnp.maximum(d, 0.0), gamma)
     idx = jnp.argmin(cost, axis=1).astype(jnp.int32)
     return jnp.min(cost, axis=1), idx
+
+
+def fused_lookup_ref(queries: jnp.ndarray, keys: jnp.ndarray,
+                     h_key: jnp.ndarray, meta: jnp.ndarray,
+                     metric: str = "l2", gamma: float = 1.0,
+                     h_repo: float = 0.0, repo_level: int = -1
+                     ) -> tuple[jnp.ndarray, ...]:
+    """Oracle for the fused multi-level lookup (see ops.fused_lookup).
+
+    Same semantics as the Pallas kernel: invalid keys (meta row 3 == 0)
+    are masked to +INF before the min; the repository wins only on strict
+    improvement (a cache tying h_repo serves the request); ties among
+    keys break to the lowest concatenated index, i.e. lowest level then
+    lowest slot.
+    """
+    q = queries.astype(jnp.float32)
+    k = keys.astype(jnp.float32)
+    if metric == "l1":
+        d = jnp.sum(jnp.abs(q[:, None, :] - k[None, :, :]), axis=-1)
+    elif metric in ("l2", "l2sq"):
+        d2 = (jnp.sum(q * q, -1)[:, None] + jnp.sum(k * k, -1)[None, :]
+              - 2.0 * q @ k.T)
+        d2 = jnp.maximum(d2, 0.0)
+        d = d2 if metric == "l2sq" else jnp.sqrt(d2)
+    else:
+        raise ValueError(metric)
+    ca = d if gamma == 1.0 else jnp.power(jnp.maximum(d, 0.0), gamma)
+    valid = (meta[3, :] > 0)[None, :]
+    cost = jnp.where(valid, ca + h_key[None, :].astype(jnp.float32), _INF)
+    best = jnp.argmin(cost, axis=1)
+    bcost = jnp.min(cost, axis=1)
+    bca = jnp.where(valid[0, best], ca[jnp.arange(q.shape[0]), best], 0.0)
+    use_repo = h_repo < bcost
+    i32 = lambda x: x.astype(jnp.int32)                      # noqa: E731
+    return (jnp.where(use_repo, h_repo, bcost),
+            jnp.where(use_repo, 0.0, bca),
+            i32(jnp.where(use_repo, repo_level, meta[0, best])),
+            i32(jnp.where(use_repo, 0, meta[1, best])),
+            i32(jnp.where(use_repo, -1, meta[2, best])))

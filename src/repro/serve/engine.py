@@ -7,7 +7,9 @@ Hierarchy (DESIGN.md §2): level 0 = device-local shard (h=0), level 1 =
 pod (ICI), level 2 = cross-pod (DCN); repository = the model itself. On
 this container the levels are simulated with calibrated h costs; on a
 real mesh the same SimCacheNetwork shards its key arrays and the KNN
-kernel runs per shard.
+kernel runs per shard. With ``EngineConfig.fused`` (default) a batch
+lookup is one fused segmented-KNN pallas_call over all levels at once —
+jitted once per placement, no per-level kernel launches or retraces.
 
 Cost-unit calibration: ``h`` values and C_a live in the same unit —
 milliseconds of serving latency — via :meth:`calibrate`, which times one
@@ -57,6 +59,7 @@ class EngineConfig:
     gamma: float = 1.0
     metric: str = "l2"
     algo: str = "cascade"         # greedy | localswap | cascade
+    fused: bool = True            # single fused lookup kernel per batch
 
 
 @dataclasses.dataclass
@@ -135,7 +138,8 @@ class SimCacheEngine:
         hs = [0.0, self.ecfg.h_ici, self.ecfg.h_dcn]
         self.simcache = SimCacheNetwork.from_placement(
             self.coords, slots, inst.slot_cache, hs, self.ecfg.h_model,
-            metric=self.ecfg.metric, gamma=self.ecfg.gamma)
+            metric=self.ecfg.metric, gamma=self.ecfg.gamma,
+            fused=self.ecfg.fused)
         return inst.total_cost(slots)
 
     # --------------------------------------------------------- data plane

@@ -1,0 +1,220 @@
+"""Differential suite: fused segmented-1-NN lookup vs the per-level
+looped reference path.
+
+The fused path (one pallas_call over the concatenation of all levels
+plus the repository-as-virtual-key) must reproduce the looped path
+(one KNN kernel per level, minima compared centrally) exactly: same
+winning (level, slot, payload) everywhere, and bitwise-equal costs for
+γ = 1 (both paths evaluate identical f32 arithmetic per (query, key)
+pair and min is associative). For γ ≠ 1 XLA may contract the
+pow/sqrt/add chain into FMAs differently across the two kernels, so
+costs there are compared to 1e-6 (observed deltas are 1 ulp). Covers
+random multi-level networks, all metrics, γ ≠ 1, empty levels
+(sentinel masking), single-level networks, repo-wins and repo-ties
+cases, plus the pure-jnp fused oracle and jit-ability.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.simcache import (REPO_LEVEL, SENTINEL_COORD, CacheLevel,
+                                 SimCacheNetwork)
+from repro.kernels.knn import fused_lookup, fused_lookup_ref
+
+
+def make_net(seed, sizes, hs, h_repo, metric="l2", gamma=1.0, d=6,
+             empty=(), use_pallas=True, fused=True):
+    rng = np.random.default_rng(seed)
+    levels = []
+    for j, (k, h) in enumerate(zip(sizes, hs)):
+        if j in empty:
+            keys = np.full((1, d), SENTINEL_COORD, np.float32)
+            vals = np.full((1,), -1, np.int32)
+        else:
+            keys = (rng.standard_normal((k, d)) * 2).astype(np.float32)
+            vals = rng.integers(0, 10_000, k).astype(np.int32)
+        levels.append(CacheLevel(keys=jnp.asarray(keys),
+                                 values=jnp.asarray(vals), h=float(h)))
+    return SimCacheNetwork(levels=levels, h_repo=float(h_repo),
+                           metric=metric, gamma=gamma,
+                           use_pallas=use_pallas, fused=fused), rng
+
+
+def assert_lookups_equal(fused_res, looped_res, exact_cost=True):
+    for name in ("level", "slot", "payload"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(fused_res, name)),
+            np.asarray(getattr(looped_res, name)), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(fused_res.hit),
+                                  np.asarray(looped_res.hit))
+    for name in ("cost", "approx_cost"):
+        a = np.asarray(getattr(fused_res, name))
+        b = np.asarray(getattr(looped_res, name))
+        if exact_cost:
+            np.testing.assert_array_equal(a, b, err_msg=name)
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6,
+                                       err_msg=name)
+
+
+@pytest.mark.parametrize("metric", ["l1", "l2", "l2sq"])
+@pytest.mark.parametrize("gamma", [1.0, 0.5, 2.0])
+def test_fused_matches_looped_random_levels(metric, gamma):
+    for seed, sizes, hs, h_repo, nq in [
+        (0, [5, 9, 3], [0.0, 0.5, 1.0], 2.0, 23),
+        (1, [17, 2, 31, 8], [0.0, 0.2, 0.7, 1.3], 3.0, 23),
+        (2, [64, 64], [0.0, 1.0], 5.0, 23),
+        # ΣK = 600 → 3 key tiles and 300 queries → 2 query tiles at the
+        # default 256 block: exercises the cross-tile running-min
+        # accumulation, metadata carry, and last-tile repo fold
+        (3, [200, 150, 250], [0.0, 0.4, 0.8], 2.5, 300),
+    ]:
+        net, rng = make_net(seed, sizes, hs, h_repo, metric, gamma)
+        q = jnp.asarray((rng.standard_normal((nq, 6)) * 2)
+                        .astype(np.float32))
+        assert_lookups_equal(net._lookup_fused(q), net._lookup_looped(q),
+                             exact_cost=gamma == 1.0)
+
+
+@pytest.mark.parametrize("metric", ["l1", "l2", "l2sq"])
+def test_fused_empty_levels_masked(metric):
+    """Sentinel keys of empty levels must never win even under l2sq,
+    where an unmasked 1e30-style sentinel used to overflow to inf."""
+    net, rng = make_net(3, [4, 1, 4], [0.0, 0.1, 0.4], 2.5, metric,
+                        empty=(1,))
+    q = jnp.asarray(rng.standard_normal((11, 6)).astype(np.float32))
+    res = net._lookup_fused(q)
+    assert not np.any(np.asarray(res.level) == 1)
+    assert np.all(np.isfinite(np.asarray(res.cost)))
+    assert_lookups_equal(res, net._lookup_looped(q))
+
+    # all levels empty → everything served by the repository
+    net_all, rng = make_net(4, [1, 1], [0.0, 0.3], 7.5, metric,
+                            empty=(0, 1))
+    res = net_all._lookup_fused(jnp.asarray(
+        rng.standard_normal((5, 6)).astype(np.float32)))
+    np.testing.assert_array_equal(np.asarray(res.level), REPO_LEVEL)
+    np.testing.assert_array_equal(np.asarray(res.payload), -1)
+    np.testing.assert_allclose(np.asarray(res.cost), 7.5)
+    np.testing.assert_array_equal(np.asarray(res.approx_cost), 0.0)
+    assert not np.any(np.asarray(res.hit))
+
+
+def test_fused_single_level():
+    net, rng = make_net(5, [13], [0.25], 4.0, "l2", 1.0)
+    q = jnp.asarray(rng.standard_normal((9, 6)).astype(np.float32))
+    assert_lookups_equal(net._lookup_fused(q), net._lookup_looped(q))
+
+
+def test_fused_repo_wins_and_ties():
+    """With a tiny h_repo the repository undercuts every cache; a cache
+    exactly tying h_repo must win (strict-improvement repo rule, same as
+    argmin over [levels…, repo])."""
+    net, rng = make_net(6, [6, 6], [0.0, 0.1], 1e-4, "l2")
+    q = jnp.asarray((rng.standard_normal((17, 6)) * 3).astype(np.float32))
+    res = net._lookup_fused(q)
+    np.testing.assert_array_equal(np.asarray(res.level), REPO_LEVEL)
+    assert_lookups_equal(res, net._lookup_looped(q))
+
+    # exact tie: query == stored key, h level == h_repo → cache serves
+    key = np.ones((1, 6), np.float32)
+    lv = CacheLevel(keys=jnp.asarray(key),
+                    values=jnp.asarray(np.array([7], np.int32)), h=2.0)
+    net_tie = SimCacheNetwork(levels=[lv], h_repo=2.0, metric="l2")
+    res = net_tie.lookup(jnp.asarray(key))
+    assert int(res.level[0]) == 0 and int(res.payload[0]) == 7
+    assert bool(res.hit[0])
+
+
+def test_fused_matches_ref_oracle():
+    """use_pallas=False routes the fused layout through the pure-jnp
+    oracle — identical results."""
+    net, rng = make_net(7, [5, 8, 2], [0.0, 0.4, 0.9], 2.0, "l2", 2.0)
+    q = jnp.asarray(rng.standard_normal((19, 6)).astype(np.float32))
+    keys, h_key, meta = net.fused_layout()
+    out_k = fused_lookup(q, keys, h_key, meta, metric="l2", gamma=2.0,
+                         h_repo=2.0, use_pallas=True)
+    out_r = fused_lookup_ref(q, keys, h_key, meta, metric="l2", gamma=2.0,
+                             h_repo=2.0)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+    no_pallas = dataclasses.replace(net, use_pallas=False)
+    assert_lookups_equal(net.lookup(q), no_pallas.lookup(q),
+                         exact_cost=False)
+
+
+def test_fused_lookup_is_jittable_end_to_end():
+    """The whole fused lookup jits as one function of the query batch —
+    no retraces across calls with the same shapes."""
+    net, rng = make_net(8, [12, 7], [0.0, 0.6], 3.0, "l2")
+    keys, h_key, meta = net.fused_layout()
+
+    @jax.jit
+    def serve(q):
+        return fused_lookup(q, keys, h_key, meta, metric="l2",
+                            h_repo=3.0)
+
+    for seed in range(3):
+        r = np.random.default_rng(seed)
+        q = jnp.asarray(r.standard_normal((16, 6)).astype(np.float32))
+        cost, ca, lvl, slot, pay = serve(q)
+        ref = net._lookup_looped(q)
+        np.testing.assert_array_equal(np.asarray(lvl),
+                                      np.asarray(ref.level))
+        # re-jitting in a new surrounding program can re-fuse the cost
+        # arithmetic (FMA contraction) → compare to 1e-6, not bitwise
+        np.testing.assert_allclose(np.asarray(cost),
+                                   np.asarray(ref.cost),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_fused_no_levels_at_all():
+    """A network with zero cache levels serves everything from the
+    repository, fused and looped alike (and with the jnp oracle)."""
+    q = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((6, 5)).astype(np.float32))
+    for use_pallas in (True, False):
+        net = SimCacheNetwork(levels=[], h_repo=4.5, metric="l2",
+                              use_pallas=use_pallas)
+        res = net.lookup(q)
+        np.testing.assert_array_equal(np.asarray(res.level), REPO_LEVEL)
+        np.testing.assert_allclose(np.asarray(res.cost), 4.5)
+        np.testing.assert_array_equal(np.asarray(res.payload), -1)
+        assert_lookups_equal(res, net._lookup_looped(q))
+
+
+def test_invalidate_layout_after_mutation():
+    """The fused layout is memoized; mutating levels + invalidate_layout
+    must be reflected, matching the looped path again."""
+    net, rng = make_net(10, [4, 4], [0.0, 0.5], 3.0, "l2")
+    q = jnp.asarray(rng.standard_normal((8, 6)).astype(np.float32))
+    net.lookup(q)                                  # memoize old layout
+    new_keys = jnp.asarray(rng.standard_normal((5, 6)).astype(np.float32))
+    net.levels[0] = CacheLevel(keys=new_keys, values=jnp.asarray(
+        np.arange(100, 105, dtype=np.int32)), h=0.0)
+    net.invalidate_layout()
+    assert_lookups_equal(net._lookup_fused(q), net._lookup_looped(q))
+
+
+def test_from_placement_fused_roundtrip():
+    """from_placement → fused lookup == looped lookup on a placement-
+    shaped input, including an empty level (all slots unassigned)."""
+    rng = np.random.default_rng(9)
+    coords = rng.standard_normal((40, 5)).astype(np.float32)
+    slot_cache = np.array([0] * 4 + [1] * 4 + [2] * 4)
+    slots = np.concatenate([rng.choice(40, 8, replace=False),
+                            np.full(4, -1)]).astype(np.int64)
+    f = SimCacheNetwork.from_placement(coords, slots, slot_cache,
+                                       hs=[0.0, 0.5, 1.0], h_repo=2.0,
+                                       metric="l1", fused=True)
+    l = SimCacheNetwork.from_placement(coords, slots, slot_cache,
+                                       hs=[0.0, 0.5, 1.0], h_repo=2.0,
+                                       metric="l1", fused=False)
+    q = jnp.asarray(coords[:25])
+    assert_lookups_equal(f.lookup(q), l.lookup(q))
+    # level 2 is empty → never serves, and its sentinel stays masked
+    assert not np.any(np.asarray(f.lookup(q).level) == 2)
