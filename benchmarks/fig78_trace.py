@@ -18,6 +18,7 @@ Reproduced claims:
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -29,6 +30,7 @@ from repro.core.objective import Instance
 from repro.core.placement import localswap
 from repro.core.placement.localswap import constrained_localswap
 from repro.core.simcache import SimCacheNetwork
+from repro.launch.mesh import make_lookup_mesh
 
 
 def build_instance(n_items: int = 4000, dim: int = 100, h: float = 150.0,
@@ -84,21 +86,31 @@ def run(n_items: int = 4000, k: int = 100, h: float = 150.0,
         out["fig7_unconstrained"]["frac_leaf_popular_or_central"] > 0.5
 
     # data-plane timing on this trace: serve the full catalog as a query
-    # batch through the runtime cache network, fused single-kernel
-    # lookup vs the per-level looped reference
-    mk = lambda fused: SimCacheNetwork.from_placement(       # noqa: E731
+    # batch through the runtime cache network — per-level looped
+    # reference vs fused single-kernel vs mesh-sharded fused (one kernel
+    # per shard over all available devices; run under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8 for 8 shards)
+    mk = lambda **kw: SimCacheNetwork.from_placement(        # noqa: E731
         inst.cat.coords, ls.slots, inst.slot_cache,
         hs=[0.0, h], h_repo=1000.0, metric=inst.cat.metric,
-        gamma=inst.cat.gamma, fused=fused)
+        gamma=inst.cat.gamma, **kw)
     q = jnp.asarray(inst.cat.coords)
-    nf, nl = mk(True), mk(False)
+    n_dev = jax.device_count()
+    mesh = make_lookup_mesh(n_dev)
+    nf, nl = mk(fused=True), mk(fused=False)
+    ns = mk(fused=True, sharded=True, mesh=mesh)
     t_fused = bench_jax(lambda: nf.lookup(q).cost)
     t_loop = bench_jax(lambda: nl.lookup(q).cost)
+    t_shard = bench_jax(lambda: ns.lookup(q).cost)
     out["fused_lookup"] = {"fused_us": t_fused * 1e6,
                            "looped_us": t_loop * 1e6,
+                           "sharded_us": t_shard * 1e6,
+                           "n_shards": n_dev,
                            "speedup": t_loop / t_fused}
     csv_line(f"fig78/fused_lookup/Q{n_items}", t_fused * 1e6,
-             f"looped_us={t_loop*1e6:.1f},speedup={t_loop/t_fused:.2f}x")
+             f"looped_us={t_loop*1e6:.1f},"
+             f"sharded_us={t_shard*1e6:.1f}({n_dev}shard),"
+             f"speedup={t_loop/t_fused:.2f}x")
 
     # Fig 7 right: constrained variant, sweep d*
     slot_cache = inst.slot_cache

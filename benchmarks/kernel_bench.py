@@ -1,9 +1,16 @@
 """Kernel micro-benchmarks (interpret mode on CPU: correctness-grade
 timings; the derived column reports achieved GB/s and GFLOP/s as a
 plausibility anchor, not TPU performance).
+
+The sharded_lookup rows shard the fused segmented key tensor over every
+available device (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for an 8-way
+mesh; on one device the row degenerates to a 1-shard mesh and measures
+pure shard_map + reduction overhead).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -12,6 +19,7 @@ from benchmarks.common import csv_line, save_json
 from repro.core.simcache import CacheLevel, SimCacheNetwork
 from repro.kernels.gain import greedy_gain
 from repro.kernels.knn import nearest_approximizer
+from repro.launch.mesh import make_lookup_mesh
 
 
 def run() -> dict:
@@ -34,6 +42,8 @@ def run() -> dict:
     # K_j = 64 is the engine's device-level slot count — each looped
     # launch pads its level to the 256-key block alone, while the fused
     # scan pads the ΣK_j concatenation once.
+    n_dev = jax.device_count()
+    mesh = make_lookup_mesh(n_dev)
     for L in (2, 4, 8):
         Q, Kj, D = 512, 64, 64
         levels = [CacheLevel(
@@ -44,14 +54,21 @@ def run() -> dict:
             h=0.1 * j) for j in range(L)]
         q = jnp.asarray(rng.standard_normal((Q, D)).astype(np.float32))
         net = SimCacheNetwork(levels=levels, h_repo=5.0, metric="l2")
+        snet = SimCacheNetwork(levels=levels, h_repo=5.0, metric="l2",
+                               sharded=True, mesh=mesh)
         t_fused = _bench(lambda x: net._lookup_fused(x).cost, q)
         t_loop = _bench(lambda x: net._lookup_looped(x).cost, q)
+        t_shard = _bench(lambda x: snet._lookup_sharded(x).cost, q)
         name = f"fused_lookup/L{L}_Q{Q}_K{Kj}_D{D}_l2"
         rows.append({"name": name, "us": t_fused * 1e6,
                      "looped_us": t_loop * 1e6,
+                     "sharded_us": t_shard * 1e6,
+                     "n_shards": n_dev,
                      "speedup": t_loop / t_fused})
         csv_line(name, t_fused * 1e6,
-                 f"looped_us={t_loop*1e6:.1f},speedup={t_loop/t_fused:.2f}x")
+                 f"looped_us={t_loop*1e6:.1f},"
+                 f"sharded_us={t_shard*1e6:.1f}({n_dev}shard),"
+                 f"speedup={t_loop/t_fused:.2f}x")
     for (R, O, D, J) in [(2048, 2048, 128, 3)]:
         x = jnp.asarray(rng.standard_normal((R, D)).astype(np.float32))
         y = jnp.asarray(rng.standard_normal((O, D)).astype(np.float32))

@@ -3,7 +3,19 @@
 # non-zero on collection errors (e.g. a missing optional dependency
 # breaking an import at collection time), so this script fails fast on
 # the class of regression that once left five modules uncollectable.
+#
+# Pass 2 is a second full tier-1 run under 8 forced host devices so the
+# in-process mesh tests (skipif device_count < 8) actually execute in
+# CI: the sharded-vs-fused-vs-looped differential suite runs on a real
+# 8-way mesh, not only through its subprocess harness — and the whole
+# suite is exercised multi-device. The *_subprocess tests spawn a fresh
+# interpreter that forces its own 8 devices whatever the parent sees,
+# so rerunning them here adds nothing; deselect them to save their
+# interpreter + jax startup cost. Same -x -q flags, so collection
+# errors still fail the build.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q -k "not _subprocess" "$@"

@@ -16,6 +16,21 @@ as a virtual key), so a batch lookup is one jitted pallas_call with no
 per-level Python loop, host-side stack, or argmin. ``fused=False`` keeps
 the original per-level probe (one KNN kernel per level, minima compared
 centrally) as the differential-testing reference.
+
+``sharded=True`` (with a ``mesh``) is the SPMD variant of the fused
+path for catalogs too large for one device: :meth:`sharded_layout` pads
+the segmented tensor so the key axis divides the shard count and
+shard_map partitions it into contiguous balanced chunks, one per device
+along ``shard_axes``. Each shard runs the *same* fused kernel over only
+its resident keys (``fold_repo=False``), and the per-shard minima — five
+scalars per query per shard — are gathered and reduced lexicographically
+(min cost, ties to the lowest shard, i.e. the lowest concatenated index)
+with the repository folded once after the reduction, so the result is
+bit-identical to the single-device fused lookup. Queries are replicated;
+only the O(B·n_shards) minima cross devices, never the key tensor. The
+same memoization contract applies: mutating ``levels`` requires
+:meth:`invalidate_layout`, which drops both the fused and the sharded
+layouts.
 """
 from __future__ import annotations
 
@@ -26,7 +41,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.knn import fused_lookup, nearest_approximizer
+from repro.kernels.knn import (fused_lookup, mesh_axes_size,
+                               nearest_approximizer, pad_to_shards,
+                               sharded_fused_lookup)
 
 REPO_LEVEL = -1
 
@@ -58,22 +75,39 @@ class LookupResult:
 
 @dataclasses.dataclass
 class SimCacheNetwork:
-    """A chain of similarity caches in front of a repository (model)."""
+    """A chain of similarity caches in front of a repository (model).
+
+    ``sharded=True`` serves lookups with the mesh-sharded fused path:
+    ``mesh`` must be set and the key axis is partitioned over
+    ``shard_axes`` (default: every mesh axis, in order).
+    """
     levels: list[CacheLevel]
     h_repo: float
     metric: str = "l2"
     gamma: float = 1.0
     use_pallas: bool = True
     fused: bool = True
+    sharded: bool = False
+    mesh: jax.sharding.Mesh | None = None
+    shard_axes: tuple[str, ...] | None = None
     _layout: tuple | None = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
+    _sharded_layout: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self.sharded and self.mesh is None:
+            raise ValueError("sharded=True requires a mesh")
 
     @classmethod
     def from_placement(cls, coords: np.ndarray, slots: np.ndarray,
                        slot_cache: np.ndarray, hs: Sequence[float],
                        h_repo: float, metric: str = "l2",
                        gamma: float = 1.0, use_pallas: bool = True,
-                       fused: bool = True) -> "SimCacheNetwork":
+                       fused: bool = True, sharded: bool = False,
+                       mesh: jax.sharding.Mesh | None = None,
+                       shard_axes: tuple[str, ...] | None = None
+                       ) -> "SimCacheNetwork":
         """Build the runtime network from a placement-algorithm output.
 
         ``slots``/``slot_cache`` are the flat allocation of
@@ -87,15 +121,16 @@ class SimCacheNetwork:
             if idx.size == 0:           # empty cache level still valid
                 keys = np.full((1, coords.shape[1]), SENTINEL_COORD,
                                np.float32)     # unreachable sentinel key
-                vals = np.full((1,), -1, np.int64)
+                vals = np.full((1,), -1, np.int32)
             else:
                 keys = coords[idx].astype(np.float32)
-                vals = idx
+                vals = idx.astype(np.int32)
             levels.append(CacheLevel(keys=jnp.asarray(keys),
-                                     values=jnp.asarray(vals, jnp.int32),
+                                     values=jnp.asarray(vals),
                                      h=float(h)))
         return cls(levels=levels, h_repo=float(h_repo), metric=metric,
-                   gamma=gamma, use_pallas=use_pallas, fused=fused)
+                   gamma=gamma, use_pallas=use_pallas, fused=fused,
+                   sharded=sharded, mesh=mesh, shard_axes=shard_axes)
 
     # ------------------------------------------------------- fused layout
     def fused_layout(self) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -133,17 +168,50 @@ class SimCacheNetwork:
                             jnp.asarray(mt))
         return self._layout
 
+    # ----------------------------------------------------- sharded layout
+    def resolved_shard_axes(self) -> tuple[str, ...]:
+        """Mesh axes the key axis shards over (default: all, in order)."""
+        if self.shard_axes is not None:
+            return tuple(self.shard_axes)
+        return tuple(self.mesh.axis_names)
+
+    def n_shards(self) -> int:
+        return mesh_axes_size(self.mesh, self.resolved_shard_axes())
+
+    def sharded_layout(self, n_shards: int
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Fused layout padded so the key axis divides ``n_shards``.
+
+        Padding keys (kernels.knn.pad_to_shards) are all-zero with
+        valid == 0 / payload == −1 — masked explicitly by the kernel, so
+        shards stay *balanced* (equal contiguous chunks of the
+        level-ordered concatenation) without perturbing any distance.
+        Memoized per shard count; the same :meth:`invalidate_layout`
+        contract applies.
+        """
+        if n_shards not in self._sharded_layout:
+            self._sharded_layout[n_shards] = pad_to_shards(
+                *self.fused_layout(), n_shards)
+        return self._sharded_layout[n_shards]
+
     def invalidate_layout(self) -> None:
-        """Drop the memoized fused layout after mutating ``levels``."""
+        """Drop the memoized fused + sharded layouts after mutating
+        ``levels``."""
         self._layout = None
+        self._sharded_layout = {}
 
     def lookup(self, queries: jax.Array) -> LookupResult:
         """Serve a batch of query embeddings (B, d) per eq. (1).
 
+        Sharded (``sharded=True`` + mesh): one fused kernel per key
+        shard + cross-shard lexicographic reduction — bit-identical to
+        the fused path.
         Fused (default): one pallas_call over the segmented key tensor.
         Looped (``fused=False``): one KNN kernel per level + central
         argmin — kept as the reference for differential tests.
         """
+        if self.sharded:
+            return self._lookup_sharded(queries)
         if self.fused:
             return self._lookup_fused(queries)
         return self._lookup_looped(queries)
@@ -152,6 +220,19 @@ class SimCacheNetwork:
         keys, h_key, meta = self.fused_layout()
         cost, ca, lvl, slot, pay = fused_lookup(
             queries, keys, h_key, meta, metric=self.metric,
+            gamma=self.gamma, h_repo=self.h_repo, repo_level=REPO_LEVEL,
+            use_pallas=self.use_pallas)
+        return LookupResult(level=lvl, slot=slot, payload=pay, cost=cost,
+                            approx_cost=ca, hit=lvl != REPO_LEVEL)
+
+    def _lookup_sharded(self, queries: jax.Array) -> LookupResult:
+        if self.fused_layout()[0].shape[0] == 0:   # no keys → repository
+            return self._lookup_fused(queries)
+        n = self.n_shards()
+        keys, h_key, meta = self.sharded_layout(n)
+        cost, ca, lvl, slot, pay = sharded_fused_lookup(
+            queries, keys, h_key, meta, self.mesh,
+            self.resolved_shard_axes(), metric=self.metric,
             gamma=self.gamma, h_repo=self.h_repo, repo_level=REPO_LEVEL,
             use_pallas=self.use_pallas)
         return LookupResult(level=lvl, slot=slot, payload=pay, cost=cost,

@@ -88,7 +88,7 @@ def _select_at(idx_col, block, fill):
 def _fused_kernel(q_ref, k_ref, hk_ref, meta_ref,
                   cost_ref, ca_ref, lvl_ref, slot_ref, pay_ref,
                   *, nk: int, metric: str, gamma: float, h_repo: float,
-                  repo_level: int):
+                  repo_level: int, fold_repo: bool):
     """Segmented 1-NN over the concatenation of all cache levels.
 
     Per key tile we get, besides the (BK, D) key block, a (1, BK) f32 row
@@ -102,6 +102,12 @@ def _fused_kernel(q_ref, k_ref, hk_ref, meta_ref,
     cost h_repo, C_a = 0, level = repo_level, slot = 0, payload = −1. It
     wins only on strict improvement, so a cache tying h_repo serves the
     request — the same tie-break as argmin over [levels…, repo].
+
+    ``fold_repo=False`` skips that last-tile fold: the kernel then
+    returns the *local* segment minimum only (cost = +INF, level =
+    repo_level, payload = −1 when no valid key exists) — the shard-local
+    entry of the mesh-sharded lookup, whose caller folds the repository
+    once after the cross-shard reduction.
     """
     kt = pl.program_id(1)
     q = q_ref[...].astype(jnp.float32)
@@ -136,24 +142,27 @@ def _fused_kernel(q_ref, k_ref, hk_ref, meta_ref,
     pay_ref[...] = jnp.where(
         better, _select_at(local_arg, meta[2:3, :] + bcast, 0), pay_ref[...])
 
-    @pl.when(kt == nk - 1)
-    def _repo():
-        use_repo = h_repo < cost_ref[...]
-        cost_ref[...] = jnp.where(use_repo, h_repo, cost_ref[...])
-        ca_ref[...] = jnp.where(use_repo, 0.0, ca_ref[...])
-        lvl_ref[...] = jnp.where(use_repo, repo_level, lvl_ref[...])
-        slot_ref[...] = jnp.where(use_repo, 0, slot_ref[...])
-        pay_ref[...] = jnp.where(use_repo, -1, pay_ref[...])
+    if fold_repo:
+        @pl.when(kt == nk - 1)
+        def _repo():
+            use_repo = h_repo < cost_ref[...]
+            cost_ref[...] = jnp.where(use_repo, h_repo, cost_ref[...])
+            ca_ref[...] = jnp.where(use_repo, 0.0, ca_ref[...])
+            lvl_ref[...] = jnp.where(use_repo, repo_level, lvl_ref[...])
+            slot_ref[...] = jnp.where(use_repo, 0, slot_ref[...])
+            pay_ref[...] = jnp.where(use_repo, -1, pay_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "metric", "gamma", "h_repo", "repo_level", "bq", "bk", "interpret"))
+    "metric", "gamma", "h_repo", "repo_level", "bq", "bk", "interpret",
+    "fold_repo"))
 def fused_lookup_pallas(queries: jax.Array, keys: jax.Array,
                         h_key: jax.Array, meta: jax.Array,
                         metric: str = "l2", gamma: float = 1.0,
                         h_repo: float = 0.0, repo_level: int = -1,
                         bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
-                        interpret: bool = True) -> tuple[jax.Array, ...]:
+                        interpret: bool = True,
+                        fold_repo: bool = True) -> tuple[jax.Array, ...]:
     """Fused multi-level 1-NN: one pallas_call over ΣK_j concatenated
     keys, minimizing C_a(q, k)^γ + h(level(k)) with the repository folded
     in as a virtual key. Inputs must be pre-padded (Q % bq == 0,
@@ -161,7 +170,8 @@ def fused_lookup_pallas(queries: jax.Array, keys: jax.Array,
 
     ``h_key`` is (1, K) f32; ``meta`` is (4, K) i32 with rows
     (level, slot, payload, valid). Returns per query (cost, approx_cost,
-    level, slot, payload).
+    level, slot, payload). ``fold_repo=False`` is the shard-local entry:
+    segment minima only, no repository fold (see _fused_kernel).
     """
     Q, D = queries.shape
     K, _ = keys.shape
@@ -171,7 +181,7 @@ def fused_lookup_pallas(queries: jax.Array, keys: jax.Array,
     grid = (Q // bq, K // bk)
     kernel = functools.partial(
         _fused_kernel, nk=K // bk, metric=metric, gamma=gamma,
-        h_repo=h_repo, repo_level=repo_level)
+        h_repo=h_repo, repo_level=repo_level, fold_repo=fold_repo)
     out_block = pl.BlockSpec((bq, 1), lambda qt, kt: (qt, 0))
     cost, ca, lvl, slot, pay = pl.pallas_call(
         kernel,

@@ -5,6 +5,16 @@ repeating key 0 so ties break to the genuine lower index, feature dim →
 lane multiple with zeros, which preserves both L1 and L2 distances), and
 falls back to the pure-jnp oracle on platforms without Pallas TPU support
 unless ``interpret=True`` (the default off-TPU) is requested.
+
+``sharded_fused_lookup`` is the SPMD data-plane entry: the segmented key
+tensor lives sharded across a mesh axis, each shard runs the fused
+segmented-1-NN kernel locally with ``fold_repo=False``, and the per-shard
+(cost, C_a, level, slot, payload) minima — 5 scalars per query per shard,
+a tiny fraction of the key tensor — are gathered and reduced
+lexicographically by ``reduce_shard_minima``, which also folds the
+repository exactly once. Contiguous balanced shards + first-min
+tie-breaking make the result bit-identical to the single-device fused
+path.
 """
 from __future__ import annotations
 
@@ -12,10 +22,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
-from repro.kernels.knn.knn import (DEFAULT_BK, DEFAULT_BQ,
+from repro.kernels.knn.knn import (DEFAULT_BK, DEFAULT_BQ, _INF,
                                    fused_lookup_pallas, knn_pallas)
-from repro.kernels.knn.ref import fused_lookup_ref, knn_ref
+from repro.kernels.knn.ref import (fused_lookup_ref, knn_ref,
+                                   reduce_shard_minima)
 
 LANE = 128
 
@@ -75,13 +88,13 @@ def nearest_approximizer(queries: jax.Array, keys: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=(
     "metric", "gamma", "h_repo", "repo_level", "bq", "bk", "use_pallas",
-    "interpret"))
+    "interpret", "fold_repo"))
 def fused_lookup(queries: jax.Array, keys: jax.Array, h_key: jax.Array,
                  meta: jax.Array, metric: str = "l2", gamma: float = 1.0,
                  h_repo: float = 0.0, repo_level: int = -1,
                  bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
-                 use_pallas: bool = True, interpret: bool | None = None
-                 ) -> tuple[jax.Array, ...]:
+                 use_pallas: bool = True, interpret: bool | None = None,
+                 fold_repo: bool = True) -> tuple[jax.Array, ...]:
     """Network-wide nearest-approximizer query, fused.
 
     ``keys`` (K, d) is the concatenation of every cache level's stored
@@ -91,10 +104,15 @@ def fused_lookup(queries: jax.Array, keys: jax.Array, h_key: jax.Array,
     repository (a virtual key with C_a = 0, h = h_repo) of
     C_a(q, k)^γ + h — eq. (1) as one kernel launch. Returns
     (cost, approx_cost, level, slot, payload), each (B,).
+
+    ``fold_repo=False`` returns the segment-local minimum only (the
+    shard-local half of ``sharded_fused_lookup``); with no valid key the
+    result is (+INF, 0, repo_level, 0, −1).
     """
     nq = queries.shape[0]
     if keys.shape[0] == 0:          # no cache keys at all → repository
-        return (jnp.full((nq,), h_repo, jnp.float32),
+        cost0 = h_repo if fold_repo else _INF
+        return (jnp.full((nq,), cost0, jnp.float32),
                 jnp.zeros((nq,), jnp.float32),
                 jnp.full((nq,), repo_level, jnp.int32),
                 jnp.zeros((nq,), jnp.int32),
@@ -103,7 +121,7 @@ def fused_lookup(queries: jax.Array, keys: jax.Array, h_key: jax.Array,
     if not use_pallas:
         return fused_lookup_ref(queries, keys, h_row[0], meta, metric=metric,
                                 gamma=gamma, h_repo=h_repo,
-                                repo_level=repo_level)
+                                repo_level=repo_level, fold_repo=fold_repo)
     if interpret is None:
         interpret = not _on_tpu()
     qp = _pad_axis(_pad_axis(queries.astype(jnp.float32), LANE, 1, "zero"),
@@ -119,5 +137,65 @@ def fused_lookup(queries: jax.Array, keys: jax.Array, h_key: jax.Array,
         mp = mp.at[2, keys.shape[0]:].set(-1)
     cost, ca, lvl, slot, pay = fused_lookup_pallas(
         qp, kp, hp, mp, metric=metric, gamma=gamma, h_repo=h_repo,
-        repo_level=repo_level, bq=bq, bk=bk, interpret=interpret)
+        repo_level=repo_level, bq=bq, bk=bk, interpret=interpret,
+        fold_repo=fold_repo)
     return cost[:nq], ca[:nq], lvl[:nq], slot[:nq], pay[:nq]
+
+
+def mesh_axes_size(mesh, axes: tuple[str, ...]) -> int:
+    """Product of the given mesh axis sizes — the lookup shard count.
+
+    The single definition shared by the shard_map entry below,
+    SimCacheNetwork.n_shards, and LookupShardPolicy.n_shards, so the
+    padding contract (key axis % shard count == 0) can never drift
+    between layout and dispatch.
+    """
+    n = 1
+    for ax in axes:
+        n *= mesh.shape[ax]
+    return n
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mesh", "axes", "metric", "gamma", "h_repo", "repo_level", "bq", "bk",
+    "use_pallas", "interpret"))
+def sharded_fused_lookup(queries: jax.Array, keys: jax.Array,
+                         h_key: jax.Array, meta: jax.Array, mesh,
+                         axes: tuple[str, ...], metric: str = "l2",
+                         gamma: float = 1.0, h_repo: float = 0.0,
+                         repo_level: int = -1, bq: int = DEFAULT_BQ,
+                         bk: int = DEFAULT_BK, use_pallas: bool = True,
+                         interpret: bool | None = None
+                         ) -> tuple[jax.Array, ...]:
+    """Mesh-sharded fused lookup: one fused kernel launch *per shard*.
+
+    ``keys``/``h_key``/``meta`` must already be padded so the key axis
+    divides the shard count (product of the ``axes`` sizes in ``mesh``;
+    padding keys carry valid == 0 — see SimCacheNetwork.sharded_layout).
+    shard_map partitions the key axis into contiguous balanced chunks,
+    each device scans only its resident chunk (queries replicated), and
+    the per-shard minima come back stacked on a leading shard axis — the
+    "tiny all-gather": 2 f32 + 3 i32 scalars per (query, shard), however
+    large the catalog. ``reduce_shard_minima`` then picks the global
+    winner and folds the repository, bit-identical to the single-device
+    fused path.
+    """
+    n_shards = mesh_axes_size(mesh, axes)
+    K = keys.shape[0]
+    assert K % n_shards == 0, (K, n_shards)
+    spec = P(tuple(axes))
+
+    def shard_fn(q, k, hk, m):
+        cost, ca, lvl, slot, pay = fused_lookup(
+            q, k, hk, m, metric=metric, gamma=gamma, h_repo=h_repo,
+            repo_level=repo_level, bq=bq, bk=bk, use_pallas=use_pallas,
+            interpret=interpret, fold_repo=False)
+        return (cost[None], ca[None], lvl[None], slot[None], pay[None])
+
+    parts = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), spec, spec, P(None, tuple(axes))),
+        out_specs=(spec,) * 5,
+        check_rep=False)(queries, keys, h_key, meta)
+    return reduce_shard_minima(*parts, h_repo=h_repo,
+                               repo_level=repo_level)

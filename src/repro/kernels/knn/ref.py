@@ -34,15 +34,17 @@ def knn_ref(queries: jnp.ndarray, keys: jnp.ndarray, metric: str = "l2",
 def fused_lookup_ref(queries: jnp.ndarray, keys: jnp.ndarray,
                      h_key: jnp.ndarray, meta: jnp.ndarray,
                      metric: str = "l2", gamma: float = 1.0,
-                     h_repo: float = 0.0, repo_level: int = -1
-                     ) -> tuple[jnp.ndarray, ...]:
+                     h_repo: float = 0.0, repo_level: int = -1,
+                     fold_repo: bool = True) -> tuple[jnp.ndarray, ...]:
     """Oracle for the fused multi-level lookup (see ops.fused_lookup).
 
     Same semantics as the Pallas kernel: invalid keys (meta row 3 == 0)
     are masked to +INF before the min; the repository wins only on strict
     improvement (a cache tying h_repo serves the request); ties among
     keys break to the lowest concatenated index, i.e. lowest level then
-    lowest slot.
+    lowest slot. ``fold_repo=False`` mirrors the kernel's shard-local
+    entry: no repository fold, and a segment with no valid key returns
+    (+INF, 0, repo_level, 0, −1) — the kernel's untouched init state.
     """
     q = queries.astype(jnp.float32)
     k = keys.astype(jnp.float32)
@@ -61,10 +63,92 @@ def fused_lookup_ref(queries: jnp.ndarray, keys: jnp.ndarray,
     best = jnp.argmin(cost, axis=1)
     bcost = jnp.min(cost, axis=1)
     bca = jnp.where(valid[0, best], ca[jnp.arange(q.shape[0]), best], 0.0)
-    use_repo = h_repo < bcost
+    # strict <: when nothing is valid (bcost == _INF) the "winner" is the
+    # masked key 0 — overridden by either the repo fold or the shard-local
+    # init-state defaults below.
+    use_repo = (h_repo < bcost) if fold_repo else (bcost >= _INF)
+    rcost = jnp.float32(h_repo) if fold_repo else bcost
     i32 = lambda x: x.astype(jnp.int32)                      # noqa: E731
-    return (jnp.where(use_repo, h_repo, bcost),
+    return (jnp.where(use_repo, rcost, bcost),
             jnp.where(use_repo, 0.0, bca),
             i32(jnp.where(use_repo, repo_level, meta[0, best])),
             i32(jnp.where(use_repo, 0, meta[1, best])),
             i32(jnp.where(use_repo, -1, meta[2, best])))
+
+
+def pad_to_shards(keys: jnp.ndarray, h_key: jnp.ndarray,
+                  meta: jnp.ndarray, n_shards: int
+                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pad the segmented key tensor so the key axis divides ``n_shards``.
+
+    Padding keys are all-zero with h == 0, valid == 0 and payload == −1
+    — masked explicitly by the kernel, so contiguous balanced chunks
+    never perturb a distance. The single definition of the shard-padding
+    contract: SimCacheNetwork.sharded_layout (production) and
+    sharded_fused_lookup_ref (oracle) both use it.
+    """
+    pad = (-keys.shape[0]) % n_shards
+    if pad:
+        keys = jnp.concatenate(
+            [keys, jnp.zeros((pad, keys.shape[1]), keys.dtype)])
+        h_key = jnp.concatenate([h_key, jnp.zeros((pad,), h_key.dtype)])
+        mpad = jnp.zeros((4, pad), meta.dtype).at[2, :].set(-1)
+        meta = jnp.concatenate([meta, mpad], axis=1)
+    return keys, h_key, meta
+
+
+def reduce_shard_minima(cost_s: jnp.ndarray, ca_s: jnp.ndarray,
+                        lvl_s: jnp.ndarray, slot_s: jnp.ndarray,
+                        pay_s: jnp.ndarray, h_repo: float,
+                        repo_level: int = -1) -> tuple[jnp.ndarray, ...]:
+    """Reduce per-shard (n_shards, B) lookup minima to the global winner.
+
+    Lexicographic argmin: minimum cost, ties to the *lowest shard index*
+    (``jnp.argmin`` keeps the first minimum). Shards are contiguous
+    balanced chunks of the level-ordered concatenated key tensor, so
+    (shard index, within-shard index) order equals concatenated-index
+    order and the tie-break matches the single-device fused kernel's
+    running strict-< min exactly. The repository is folded once here, on
+    strict improvement — never inside a shard. Shared by the shard_map
+    path (ops.sharded_fused_lookup) and the mesh-free oracle below.
+    """
+    best = jnp.argmin(cost_s, axis=0)
+    take = lambda x: jnp.take_along_axis(              # noqa: E731
+        x, best[None, :], axis=0)[0]
+    bcost, bca = take(cost_s), take(ca_s)
+    blvl, bslot, bpay = take(lvl_s), take(slot_s), take(pay_s)
+    use_repo = h_repo < bcost
+    i32 = lambda x: x.astype(jnp.int32)                # noqa: E731
+    return (jnp.where(use_repo, jnp.float32(h_repo), bcost),
+            jnp.where(use_repo, 0.0, bca),
+            i32(jnp.where(use_repo, repo_level, blvl)),
+            i32(jnp.where(use_repo, 0, bslot)),
+            i32(jnp.where(use_repo, -1, bpay)))
+
+
+def sharded_fused_lookup_ref(queries: jnp.ndarray, keys: jnp.ndarray,
+                             h_key: jnp.ndarray, meta: jnp.ndarray,
+                             n_shards: int, metric: str = "l2",
+                             gamma: float = 1.0, h_repo: float = 0.0,
+                             repo_level: int = -1
+                             ) -> tuple[jnp.ndarray, ...]:
+    """Mesh-free oracle of the sharded fused lookup (ops.
+    sharded_fused_lookup): pad the concatenated key tensor to a multiple
+    of ``n_shards``, split it into contiguous balanced chunks, take each
+    chunk's local minimum with ``fold_repo=False``, and reduce with
+    :func:`reduce_shard_minima`.
+
+    Runs on a single device (plain chunking stands in for shard_map), so
+    the differential suite can exercise every shard count without an
+    8-device mesh.
+    """
+    keys, h_key, meta = pad_to_shards(keys, h_key, meta, n_shards)
+    S = keys.shape[0] // n_shards
+    parts = [fused_lookup_ref(
+        queries, keys[s * S:(s + 1) * S], h_key[s * S:(s + 1) * S],
+        meta[:, s * S:(s + 1) * S], metric=metric, gamma=gamma,
+        h_repo=h_repo, repo_level=repo_level, fold_repo=False)
+        for s in range(n_shards)]
+    stk = [jnp.stack([p[i] for p in parts]) for i in range(5)]  # (n, B) × 5
+    return reduce_shard_minima(*stk, h_repo=h_repo,
+                               repo_level=repo_level)

@@ -23,6 +23,16 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_lookup_mesh(n_devices: int | None = None):
+    """1-axis ("data",) mesh over every visible device, for running the
+    mesh-sharded cache lookup standalone (benchmarks, tests; 8-way under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8). On a production
+    pod the lookup instead rides the axes of the production mesh picked
+    by launch.sharding.LookupShardPolicy."""
+    n = jax.device_count() if n_devices is None else n_devices
+    return jax.make_mesh((n,), ("data",))
+
+
 # v5e hardware constants used by the roofline analysis (per chip)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s

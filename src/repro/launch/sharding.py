@@ -30,6 +30,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.kernels.knn import mesh_axes_size
 from repro.models.schema import ParamSpec
 from repro.models.sharding_api import ShardPolicy
 
@@ -260,6 +261,41 @@ class MeshShardPolicy(ShardPolicy):
                 spec = P()
             out[k] = NamedSharding(self.mesh, spec)
         return out
+
+
+@dataclasses.dataclass(frozen=True)
+class LookupShardPolicy:
+    """Key-axis sharding policy for the similarity-cache fused lookup.
+
+    The SimCacheNetwork data plane shards the segmented key tensor
+    (keys, h_key, meta) over mesh axes; this policy decides *which*
+    axes, reusing :func:`_resolve`'s divisibility-fallback logic: the
+    longest prefix of ``candidates`` present in the mesh is kept (the
+    key axis is always padded to a multiple of the resulting shard
+    count, so divisibility is guaranteed by construction — we resolve
+    against the full candidate product). Preference order puts "model"
+    first: lookup shards and tensor-parallel shards then live on the
+    same devices, so cache keys sit next to the KV-prefix payloads they
+    index.
+    """
+    mesh: Mesh
+    axes: tuple[str, ...]
+
+    @classmethod
+    def create(cls, mesh: Mesh,
+               candidates: tuple[str, ...] = ("model", "data", "pod")
+               ) -> "LookupShardPolicy":
+        present = tuple(ax for ax in candidates if ax in mesh.shape)
+        if not present:                  # unrecognised axes: use them all
+            present = tuple(mesh.axis_names)
+        total = mesh_axes_size(mesh, present)
+        spec = _resolve((total,), ("keys",), {"keys": present}, mesh)
+        axes = spec[0] if spec[0] is not None else ()
+        return cls(mesh=mesh, axes=tuple(axes))
+
+    @property
+    def n_shards(self) -> int:
+        return mesh_axes_size(self.mesh, self.axes)
 
 
 def replicated(mesh: Mesh) -> NamedSharding:

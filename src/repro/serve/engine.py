@@ -5,11 +5,16 @@ back according to the configured placement policy.
 
 Hierarchy (DESIGN.md §2): level 0 = device-local shard (h=0), level 1 =
 pod (ICI), level 2 = cross-pod (DCN); repository = the model itself. On
-this container the levels are simulated with calibrated h costs; on a
-real mesh the same SimCacheNetwork shards its key arrays and the KNN
-kernel runs per shard. With ``EngineConfig.fused`` (default) a batch
-lookup is one fused segmented-KNN pallas_call over all levels at once —
-jitted once per placement, no per-level kernel launches or retraces.
+this container the levels are simulated with calibrated h costs. With
+``EngineConfig.fused`` (default) a batch lookup is one fused
+segmented-KNN pallas_call over all levels at once — jitted once per
+placement, no per-level kernel launches or retraces. With
+``EngineConfig.sharded`` and an engine ``mesh``, the segmented key
+tensor is partitioned across the mesh axes picked by
+``LookupShardPolicy`` and each device scans only its resident shard
+(one fused kernel per shard + a tiny cross-shard reduction,
+bit-identical results) — the catalog then scales with the mesh instead
+of a single device's memory.
 
 Cost-unit calibration: ``h`` values and C_a live in the same unit —
 milliseconds of serving latency — via :meth:`calibrate`, which times one
@@ -45,6 +50,7 @@ from repro.core.objective import Instance
 from repro.core.placement import greedy, greedy_then_localswap, localswap
 from repro.core.simcache import SimCacheNetwork
 from repro.core.topology import tpu_hierarchy
+from repro.launch.sharding import LookupShardPolicy
 from repro.models import model as model_api
 
 
@@ -60,6 +66,7 @@ class EngineConfig:
     metric: str = "l2"
     algo: str = "cascade"         # greedy | localswap | cascade
     fused: bool = True            # single fused lookup kernel per batch
+    sharded: bool = False         # mesh-sharded keys (needs engine mesh)
 
 
 @dataclasses.dataclass
@@ -83,7 +90,8 @@ class SimCacheEngine:
     """Batched serving for a decoder LM behind a similarity-cache network."""
 
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig,
-                 catalog_coords: np.ndarray):
+                 catalog_coords: np.ndarray,
+                 mesh: jax.sharding.Mesh | None = None):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
@@ -95,6 +103,13 @@ class SimCacheEngine:
         self.stats = ServeStats()
         self._prefill = jax.jit(model_api.make_prefill(cfg))
         self.simcache: SimCacheNetwork | None = None
+        # key-axis shard policy for the sharded data plane: resolved once
+        # from the mesh, reused on every placement refresh
+        self.mesh = mesh
+        self.lookup_shards = (LookupShardPolicy.create(mesh)
+                              if mesh is not None else None)
+        if ecfg.sharded and mesh is None:
+            raise ValueError("EngineConfig.sharded requires a mesh")
 
     # ------------------------------------------------------- calibration
     def calibrate(self, sample_prompt: jnp.ndarray, n: int = 3) -> float:
@@ -139,7 +154,10 @@ class SimCacheEngine:
         self.simcache = SimCacheNetwork.from_placement(
             self.coords, slots, inst.slot_cache, hs, self.ecfg.h_model,
             metric=self.ecfg.metric, gamma=self.ecfg.gamma,
-            fused=self.ecfg.fused)
+            fused=self.ecfg.fused, sharded=self.ecfg.sharded,
+            mesh=self.mesh,
+            shard_axes=(self.lookup_shards.axes
+                        if self.lookup_shards else None))
         return inst.total_cost(slots)
 
     # --------------------------------------------------------- data plane

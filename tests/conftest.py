@@ -1,6 +1,10 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
-see the single real CPU device; only launch/dryrun.py forces 512 host
-devices (and does so before any jax import).
+"""Shared fixtures. NOTE: no XLA_FLAGS here — the default tier-1 pass
+runs against the single real CPU device; only launch/dryrun.py forces
+512 host devices (and does so before any jax import). scripts/ci.sh
+adds a *second* pass that opts the whole suite into 8 forced host
+devices (the in-process mesh tests in test_sharded_lookup.py are
+skipif-gated on device_count ≥ 8 and only execute there); the suite is
+green under both device counts.
 
 Offline environments lack ``hypothesis``; rather than skipping the five
 property-based modules wholesale, we install a minimal seeded-random

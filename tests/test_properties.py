@@ -12,6 +12,7 @@ The paper's structural claims, checked on randomized instances:
 import itertools
 
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import catalog, demand, topology
@@ -76,6 +77,25 @@ def test_greedy_half_approximation(seed):
     for combo in itertools.product(range(5), repeat=2):
         best = max(best, inst.caching_gain(np.array(combo, np.int64)))
     assert g_gain >= 0.5 * best - 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n_obj=st.integers(4, 8),
+       k_leaf=st.integers(1, 3), k_parent=st.integers(1, 3))
+def test_greedy_lazy_matches_eager(seed, n_obj, k_leaf, k_parent):
+    """The accelerated/lazy greedy (stale max-heap, §3.2's "smart
+    implementation") must return the *exact* textbook-greedy solution:
+    submodularity guarantees stale heap gains only overestimate, so
+    re-evaluating the popped candidate preserves the selection order.
+    Random continuous coords make exact gain ties measure-zero, so the
+    allocations — not just their costs — must coincide."""
+    inst = make_random_instance(seed, n_obj=n_obj, k=(k_leaf, k_parent),
+                                metric="l2")
+    lazy_slots = greedy(inst, lazy=True)
+    eager_slots = greedy(inst, lazy=False)
+    np.testing.assert_array_equal(lazy_slots, eager_slots)
+    assert inst.total_cost(lazy_slots) == \
+        pytest.approx(inst.total_cost(eager_slots), rel=1e-12)
 
 
 @settings(max_examples=10, deadline=None)

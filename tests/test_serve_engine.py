@@ -12,7 +12,7 @@ from repro.models import model as model_api
 from repro.serve import EngineConfig, SimCacheEngine
 
 
-def make_engine(k=(16, 24, 32), algo="cascade"):
+def make_engine(k=(16, 24, 32), algo="cascade", sharded=False, mesh=None):
     cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
                               n_layers=2, d_model=64, n_heads=4,
                               n_kv_heads=2, head_dim=16, d_ff=128, vocab=256)
@@ -20,8 +20,8 @@ def make_engine(k=(16, 24, 32), algo="cascade"):
     cat = catalog_api.embedding_catalog(n=400, dim=16, seed=1)
     ecfg = EngineConfig(k_device=k[0], k_pod=k[1], k_global=k[2],
                         h_ici=1.0, h_dcn=10.0, h_model=100.0,
-                        metric="l2", algo=algo)
-    eng = SimCacheEngine(cfg, params, ecfg, cat.coords)
+                        metric="l2", algo=algo, sharded=sharded)
+    eng = SimCacheEngine(cfg, params, ecfg, cat.coords, mesh=mesh)
     return eng, cfg, cat
 
 
@@ -65,6 +65,34 @@ def test_engine_calibration_sets_cost_units():
     assert ms > 0
     assert eng.ecfg.h_model == ms
     assert eng.ecfg.h_ici < eng.ecfg.h_dcn < eng.ecfg.h_model
+
+
+def test_engine_sharded_data_plane_matches_fused():
+    """EngineConfig.sharded + a mesh routes lookups through the
+    mesh-sharded fused path; served stats must match the single-device
+    fused engine bit-for-bit on the same trace (here a trivial 1-device
+    mesh — the 8-way equivalence is covered by test_sharded_lookup)."""
+    import jax
+    mesh = jax.make_mesh((1,), ("data",))
+    eng_f, cfg, cat = make_engine(algo="greedy")
+    eng_s, _, _ = make_engine(algo="greedy", sharded=True, mesh=mesh)
+    assert eng_s.lookup_shards is not None
+    for eng in (eng_f, eng_s):
+        serve_trace(eng, cfg, cat, n_batches=4)
+        eng.refresh_placement()
+        eng.stats = type(eng.stats)()
+    assert eng_s.simcache.sharded and eng_s.simcache.mesh is mesh
+    sf = serve_trace(eng_f, cfg, cat, n_batches=6, seed=5)
+    ss = serve_trace(eng_s, cfg, cat, n_batches=6, seed=5)
+    assert sf.n_hits == ss.n_hits
+    assert sf.model_calls == ss.model_calls
+    assert sf.total_cost == ss.total_cost
+    assert sf.total_approx_cost == ss.total_approx_cost
+
+
+def test_engine_sharded_requires_mesh():
+    with np.testing.assert_raises(ValueError):
+        make_engine(sharded=True, mesh=None)
 
 
 def test_placement_algorithms_rank_sanely():
