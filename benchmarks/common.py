@@ -48,6 +48,15 @@ def bench_jax(fn, *args, repeat: int = 3, **kw) -> float:
     return (time.perf_counter() - t0) / repeat
 
 
+def lookup_recall(pruned, exact) -> float:
+    """Fraction of queries whose pruned LookupResult found the exact
+    winner (same payload at the same level) — the single definition of
+    the benchmark recall column (tests assert the same criterion)."""
+    same = (np.asarray(pruned.payload) == np.asarray(exact.payload)) \
+        & (np.asarray(pruned.level) == np.asarray(exact.level))
+    return float(np.mean(same))
+
+
 def tandem_instance(L: int, sigma: float, h: float, k: int,
                     h_repo: float, gamma: float = 1.0) -> Instance:
     """The paper's §6.1 setup: L×L grid, Gaussian demand, tandem network."""

@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_jax, csv_line, save_json, timed
+from benchmarks.common import (bench_jax, csv_line, lookup_recall,
+                               save_json, timed)
 from repro.core import catalog as catalog_api
 from repro.core import demand as demand_api
 from repro.core import topology
@@ -102,14 +103,25 @@ def run(n_items: int = 4000, k: int = 100, h: float = 150.0,
     t_fused = bench_jax(lambda: nf.lookup(q).cost)
     t_loop = bench_jax(lambda: nl.lookup(q).cost)
     t_shard = bench_jax(lambda: ns.lookup(q).cost)
+    # LSH-pruned row on the same trace: K = 200 stored keys is far below
+    # the catalogs-≫-10⁵ regime pruning targets (kernel_bench.py has
+    # those), so this row mostly prices the hashing overhead — the
+    # recall column is the point here.
+    exact = nf.lookup(q)
+    pruned = nf.lookup(q, prune="lsh")
+    t_pruned = bench_jax(lambda: nf.lookup(q, prune="lsh").cost)
+    recall = lookup_recall(pruned, exact)
     out["fused_lookup"] = {"fused_us": t_fused * 1e6,
                            "looped_us": t_loop * 1e6,
                            "sharded_us": t_shard * 1e6,
+                           "pruned_us": t_pruned * 1e6,
+                           "pruned_recall": recall,
                            "n_shards": n_dev,
                            "speedup": t_loop / t_fused}
     csv_line(f"fig78/fused_lookup/Q{n_items}", t_fused * 1e6,
              f"looped_us={t_loop*1e6:.1f},"
              f"sharded_us={t_shard*1e6:.1f}({n_dev}shard),"
+             f"pruned_us={t_pruned*1e6:.1f}(recall={recall:.4f}),"
              f"speedup={t_loop/t_fused:.2f}x")
 
     # Fig 7 right: constrained variant, sweep d*

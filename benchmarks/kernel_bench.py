@@ -7,18 +7,28 @@ available device (run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for an 8-way
 mesh; on one device the row degenerates to a 1-shard mesh and measures
 pure shard_map + reduction overhead).
+
+The pruned_lookup rows measure the LSH / k-means candidate pre-filter
+(kernels/knn/lsh.py) against the exact fused scan on Zipf-weighted
+query batches (repeated popular items + small noise — the paper's
+workload shape), recording achieved recall next to the speedup. The
+10⁶-key rows multiply the exact-scan baseline cost by ~10×; opt in with
+``KERNEL_BENCH_FULL=1`` (the nightly/full configuration).
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_jax as _bench
-from benchmarks.common import csv_line, save_json
+from benchmarks.common import csv_line, lookup_recall, save_json
 from repro.core.simcache import CacheLevel, SimCacheNetwork
 from repro.kernels.gain import greedy_gain
-from repro.kernels.knn import nearest_approximizer
+from repro.kernels.knn import (KMeansPolicy, SimHashPolicy,
+                               nearest_approximizer)
 from repro.launch.mesh import make_lookup_mesh
 
 
@@ -69,6 +79,60 @@ def run() -> dict:
                  f"looped_us={t_loop*1e6:.1f},"
                  f"sharded_us={t_shard*1e6:.1f}({n_dev}shard),"
                  f"speedup={t_loop/t_fused:.2f}x")
+    # LSH / k-means pruned lookup vs the exact fused scan. Table params
+    # keep the per-query candidate count small enough that the *batch
+    # union* stays well under max_candidates (overflow truncation is
+    # what kills recall, not hashing quality).
+    pruned_policies = {
+        10_000: [SimHashPolicy(n_tables=4, n_bits=11, n_probes=2,
+                               max_candidates=4096),
+                 KMeansPolicy(n_clusters=512, n_probes=8, n_iters=5,
+                              max_candidates=8192)],
+        100_000: [SimHashPolicy(n_tables=4, n_bits=14, n_probes=2,
+                                max_candidates=8192),
+                  KMeansPolicy(n_clusters=2048, n_probes=8, n_iters=5,
+                               max_candidates=32768)],
+        1_000_000: [SimHashPolicy(n_tables=4, n_bits=16, n_probes=2,
+                                  max_candidates=16384)],
+    }
+    sizes = [10_000, 100_000]
+    if os.environ.get("KERNEL_BENCH_FULL"):
+        sizes.append(1_000_000)
+    for n in sizes:
+        D, B = 64, 64
+        coords = rng.standard_normal((n, D)).astype(np.float32)
+        half = n // 2
+        levels = [CacheLevel(keys=jnp.asarray(coords[:half]),
+                             values=jnp.asarray(
+                                 np.arange(half, dtype=np.int32)), h=0.0),
+                  CacheLevel(keys=jnp.asarray(coords[half:]),
+                             values=jnp.asarray(
+                                 np.arange(half, n, dtype=np.int32)),
+                             h=0.5)]
+        net = SimCacheNetwork(levels=levels, h_repo=1e9, metric="l2")
+        pz = 1.0 / (np.arange(1, 4097) ** 0.9)
+        ids = rng.permutation(n)[:4096][rng.choice(4096, B,
+                                                   p=pz / pz.sum())]
+        q = jnp.asarray(coords[ids] + 0.05 * rng.standard_normal(
+            (B, D)).astype(np.float32))
+        exact = net._lookup_fused(q)
+        t_exact = _bench(lambda x: net._lookup_fused(x).cost, q)
+        for pol in pruned_policies[n]:
+            pnet = SimCacheNetwork(levels=levels, h_repo=1e9, metric="l2",
+                                   candidate_policy=pol)
+            res = pnet.lookup(q, prune=pol.kind)
+            recall = lookup_recall(res, exact)
+            t_pruned = _bench(
+                lambda x: pnet.lookup(x, prune=pol.kind).cost, q)
+            name = f"pruned_lookup/{pol.kind}_n{n}_Q{B}_D{D}_l2"
+            rows.append({"name": name, "us": t_pruned * 1e6,
+                         "exact_us": t_exact * 1e6,
+                         "speedup": t_exact / t_pruned,
+                         "recall": recall})
+            csv_line(name, t_pruned * 1e6,
+                     f"exact_us={t_exact*1e6:.1f},"
+                     f"speedup={t_exact/t_pruned:.2f}x,"
+                     f"recall={recall:.4f}")
     for (R, O, D, J) in [(2048, 2048, 128, 3)]:
         x = jnp.asarray(rng.standard_normal((R, D)).astype(np.float32))
         y = jnp.asarray(rng.standard_normal((O, D)).astype(np.float32))

@@ -6,16 +6,29 @@
 #
 # Pass 2 is a second full tier-1 run under 8 forced host devices so the
 # in-process mesh tests (skipif device_count < 8) actually execute in
-# CI: the sharded-vs-fused-vs-looped differential suite runs on a real
-# 8-way mesh, not only through its subprocess harness — and the whole
-# suite is exercised multi-device. The *_subprocess tests spawn a fresh
-# interpreter that forces its own 8 devices whatever the parent sees,
-# so rerunning them here adds nothing; deselect them to save their
-# interpreter + jax startup cost. Same -x -q flags, so collection
-# errors still fail the build.
+# CI: both the sharded-vs-fused-vs-looped differential suite *and* the
+# LSH/k-means pruning suite (tests/test_lsh_pruning.py) run on a real
+# 8-way mesh, not only through the subprocess harness / 1-device mesh —
+# and the whole suite is exercised multi-device. The *_subprocess tests
+# spawn a fresh interpreter that forces its own 8 devices whatever the
+# parent sees, so rerunning them here adds nothing; deselect them to
+# save their interpreter + jax startup cost. Same -x -q flags, so
+# collection errors still fail the build.
+#
+# Marker split: both default passes deselect `-m "not slow"` — the
+# slow-marked tests (e.g. the 10⁶-key LSH recall test) are additionally
+# env-gated and run only in the nightly/full pass, opted in with
+# CI_FULL=1 (which drops the marker filter from pass 1 and opens the
+# env gate). Pass 2 keeps the deselect even then: the slow tests are
+# device-count independent, so rerunning them 8-way adds nothing —
+# the same rationale as the *_subprocess deselect.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-python -m pytest -x -q "$@"
+MARKER=(-m "not slow")
+if [[ "${CI_FULL:-0}" == "1" ]]; then
+    MARKER=()
+fi
+python -m pytest -x -q ${MARKER[@]+"${MARKER[@]}"} "$@"
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
-    python -m pytest -x -q -k "not _subprocess" "$@"
+    python -m pytest -x -q -m "not slow" -k "not _subprocess" "$@"

@@ -35,8 +35,16 @@ class Demand:
         return self.lam.shape[1]
 
     def sample(self, n: int, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
-        """Sample n requests → (object_idx, ingress_idx), iid ∝ λ."""
-        p = self.lam.ravel()
+        """Sample n requests → (object_idx, ingress_idx), iid ∝ λ.
+
+        ``lam`` is cast to float64 and renormalized first: a float32
+        catalog's probabilities can sum to 1 ± few·1e-7, which
+        ``rng.choice`` rejects ("probabilities do not sum to 1"), and
+        the renormalization keeps draws reproducible under a fixed
+        ``rng`` regardless of the platform's float/int widths.
+        """
+        p = np.asarray(self.lam, np.float64).ravel()
+        p = p / p.sum()
         flat = rng.choice(p.size, size=n, p=p)
         ing, obj = np.divmod(flat, self.lam.shape[1])
         return obj.astype(np.int64), ing.astype(np.int64)

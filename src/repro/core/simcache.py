@@ -31,6 +31,21 @@ only the O(B·n_shards) minima cross devices, never the key tensor. The
 same memoization contract applies: mutating ``levels`` requires
 :meth:`invalidate_layout`, which drops both the fused and the sharded
 layouts.
+
+``lookup(prune="lsh"|"kmeans")`` puts a candidate pre-filter
+(kernels.knn.lsh) in front of the fused scan: the query batch is hashed
+against memoized SimHash / k-means-routing tables, the batch union of
+candidate rows is gathered into one compact padded index tensor, and
+the *same* fused kernel runs over only those rows — per shard of the
+balanced contiguous ``sharded_layout`` when ``sharded=True``, with
+``reduce_shard_minima`` and the tie-break order untouched.
+``verify=True`` re-scans every query whose pruned cost reaches the
+returned un-scanned-h bound through the exact path, making the result
+bit-identical to the exact fused lookup by construction (the verifier
+contract in kernels/knn/lsh.py). Tables are memoized next to the
+layouts; unlike the plain fused path, a pruned lookup against mutated
+but not invalidated ``levels`` raises instead of serving stale
+candidates.
 """
 from __future__ import annotations
 
@@ -41,9 +56,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.knn import (fused_lookup, mesh_axes_size,
-                               nearest_approximizer, pad_to_shards,
-                               sharded_fused_lookup)
+from repro.kernels.knn import (default_policy, fused_lookup,
+                               mesh_axes_size, nearest_approximizer,
+                               pad_to_shards, pruned_fused_lookup,
+                               sharded_fused_lookup,
+                               sharded_pruned_fused_lookup,
+                               stack_shard_tables)
 
 REPO_LEVEL = -1
 
@@ -90,9 +108,18 @@ class SimCacheNetwork:
     sharded: bool = False
     mesh: jax.sharding.Mesh | None = None
     shard_axes: tuple[str, ...] | None = None
+    # CandidatePolicy override, used only when its ``kind`` matches the
+    # ``prune=`` argument of lookup(); other kinds fall back to
+    # kernels.knn.lsh.default_policy so one network can still serve both
+    # pruning families side by side.
+    candidate_policy: object | None = None
     _layout: tuple | None = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
+    _layout_fp: tuple | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
     _sharded_layout: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False)
+    _tables: dict = dataclasses.field(
         default_factory=dict, init=False, repr=False, compare=False)
 
     def __post_init__(self):
@@ -106,7 +133,8 @@ class SimCacheNetwork:
                        gamma: float = 1.0, use_pallas: bool = True,
                        fused: bool = True, sharded: bool = False,
                        mesh: jax.sharding.Mesh | None = None,
-                       shard_axes: tuple[str, ...] | None = None
+                       shard_axes: tuple[str, ...] | None = None,
+                       candidate_policy: object | None = None
                        ) -> "SimCacheNetwork":
         """Build the runtime network from a placement-algorithm output.
 
@@ -130,7 +158,8 @@ class SimCacheNetwork:
                                      h=float(h)))
         return cls(levels=levels, h_repo=float(h_repo), metric=metric,
                    gamma=gamma, use_pallas=use_pallas, fused=fused,
-                   sharded=sharded, mesh=mesh, shard_axes=shard_axes)
+                   sharded=sharded, mesh=mesh, shard_axes=shard_axes,
+                   candidate_policy=candidate_policy)
 
     # ------------------------------------------------------- fused layout
     def fused_layout(self) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -166,6 +195,7 @@ class SimCacheNetwork:
                   else np.zeros((4, 0), np.int32))
             self._layout = (jnp.asarray(cat), jnp.asarray(hk),
                             jnp.asarray(mt))
+            self._layout_fp = self._levels_fingerprint()
         return self._layout
 
     # ----------------------------------------------------- sharded layout
@@ -195,12 +225,78 @@ class SimCacheNetwork:
         return self._sharded_layout[n_shards]
 
     def invalidate_layout(self) -> None:
-        """Drop the memoized fused + sharded layouts after mutating
-        ``levels``."""
+        """Drop the memoized fused + sharded layouts (and the candidate
+        pruning tables built from them) after mutating ``levels``."""
         self._layout = None
+        self._layout_fp = None
         self._sharded_layout = {}
+        self._tables = {}
 
-    def lookup(self, queries: jax.Array) -> LookupResult:
+    # -------------------------------------------------- candidate tables
+    def _levels_fingerprint(self) -> tuple:
+        """Identity of the current ``levels`` content: the array objects
+        themselves (strong references — compared with ``is``, and their
+        liveness makes id/slot reuse impossible) plus the h costs, so
+        pruned lookups can detect a mutation that was not followed by
+        :meth:`invalidate_layout`."""
+        return tuple((lv.keys, lv.values, float(lv.h))
+                     for lv in self.levels)
+
+    @staticmethod
+    def _fingerprints_match(a: tuple | None, b: tuple) -> bool:
+        return a is not None and len(a) == len(b) and all(
+            ak is bk and av is bv and ah == bh
+            for (ak, av, ah), (bk, bv, bh) in zip(a, b))
+
+    def _check_layout_fresh(self) -> None:
+        if self._layout is not None and not self._fingerprints_match(
+                self._layout_fp, self._levels_fingerprint()):
+            raise RuntimeError(
+                "stale candidate tables: `levels` were mutated after the "
+                "fused layout (and the LSH/k-means tables indexing it) "
+                "were built — call invalidate_layout() before a pruned "
+                "lookup. The un-pruned paths serve the stale layout "
+                "verbatim (documented memoization contract); pruning "
+                "refuses, rather than returning candidates into a layout "
+                "that no longer exists.")
+
+    def _resolve_policy(self, prune: str):
+        pol = self.candidate_policy
+        if pol is not None and getattr(pol, "kind", None) == prune:
+            return pol
+        return default_policy(prune)
+
+    def _tables_for(self, policy, n_shards: int
+                    ) -> tuple[jax.Array, jax.Array, int]:
+        """Memoized (proj, buckets, n_probes) for one policy: built over
+        the fused layout (``n_shards == 0``) or per contiguous balanced
+        shard chunk, stacked on a leading shard axis (``n_shards ≥ 1``).
+        Dropped by :meth:`invalidate_layout` alongside the layouts."""
+        memo_key = (policy, n_shards)
+        if memo_key not in self._tables:
+            if n_shards == 0:
+                keys, _, meta = self.fused_layout()
+                t = policy.build(np.asarray(keys),
+                                 np.asarray(meta)[3] > 0)
+                self._tables[memo_key] = (jnp.asarray(t.proj),
+                                          jnp.asarray(t.buckets),
+                                          t.n_probes)
+            else:
+                keys, _, meta = self.sharded_layout(n_shards)
+                keys_np, meta_np = np.asarray(keys), np.asarray(meta)
+                S = keys_np.shape[0] // n_shards
+                ts = [policy.for_shard(s).build(
+                    keys_np[s * S:(s + 1) * S],
+                    meta_np[3, s * S:(s + 1) * S] > 0)
+                    for s in range(n_shards)]
+                proj_s, buckets_s, n_probes = stack_shard_tables(ts)
+                self._tables[memo_key] = (jnp.asarray(proj_s),
+                                          jnp.asarray(buckets_s),
+                                          n_probes)
+        return self._tables[memo_key]
+
+    def lookup(self, queries: jax.Array, prune: str | None = None,
+               verify: bool = False) -> LookupResult:
         """Serve a batch of query embeddings (B, d) per eq. (1).
 
         Sharded (``sharded=True`` + mesh): one fused kernel per key
@@ -209,7 +305,13 @@ class SimCacheNetwork:
         Fused (default): one pallas_call over the segmented key tensor.
         Looped (``fused=False``): one KNN kernel per level + central
         argmin — kept as the reference for differential tests.
+        Pruned (``prune="lsh"|"kmeans"``): candidate pre-filter in front
+        of the fused/sharded scan; ``verify=True`` re-scans any query
+        whose pruned cost reaches the un-scanned-h bound — bit-identical
+        to the exact path by construction (kernels/knn/lsh.py).
         """
+        if prune is not None:
+            return self._lookup_pruned(queries, prune, verify)
         if self.sharded:
             return self._lookup_sharded(queries)
         if self.fused:
@@ -237,6 +339,67 @@ class SimCacheNetwork:
             use_pallas=self.use_pallas)
         return LookupResult(level=lvl, slot=slot, payload=pay, cost=cost,
                             approx_cost=ca, hit=lvl != REPO_LEVEL)
+
+    def _lookup_pruned(self, queries: jax.Array, prune: str,
+                       verify: bool) -> LookupResult:
+        policy = self._resolve_policy(prune)
+        self._check_layout_fresh()
+        if self.fused_layout()[0].shape[0] == 0:   # no keys → repository
+            return self._lookup_fused(queries)
+        if self.sharded:
+            n = self.n_shards()
+            keys, h_key, meta = self.sharded_layout(n)
+            proj, buckets, n_probes = self._tables_for(policy, n)
+            cost, ca, lvl, slot, pay, bound = sharded_pruned_fused_lookup(
+                queries, keys, h_key, meta, proj, buckets, self.mesh,
+                self.resolved_shard_axes(), kind=policy.kind,
+                n_probes=n_probes,
+                cap_union=policy.resolve_cap(keys.shape[0] // n),
+                metric=self.metric, gamma=self.gamma, h_repo=self.h_repo,
+                repo_level=REPO_LEVEL, use_pallas=self.use_pallas)
+        else:
+            keys, h_key, meta = self.fused_layout()
+            proj, buckets, n_probes = self._tables_for(policy, 0)
+            cost, ca, lvl, slot, pay, bound = pruned_fused_lookup(
+                queries, keys, h_key, meta, proj, buckets,
+                kind=policy.kind, n_probes=n_probes,
+                cap_union=policy.resolve_cap(keys.shape[0]),
+                metric=self.metric, gamma=self.gamma, h_repo=self.h_repo,
+                repo_level=REPO_LEVEL, use_pallas=self.use_pallas)
+        res = LookupResult(level=lvl, slot=slot, payload=pay, cost=cost,
+                           approx_cost=ca, hit=lvl != REPO_LEVEL)
+        if not verify:
+            return res
+        # verifier: cost < bound proves the pruned winner exact (every
+        # un-scanned valid key costs ≥ bound); anything else — including
+        # exact ties, whose break could prefer an un-scanned lower index
+        # — re-scans through the exact fused/sharded path. Only the
+        # flagged queries re-scan (per-query kernel rows are independent,
+        # so a sub-batch is bitwise the full batch's rows), padded to a
+        # power of two so repeated verify calls reuse a handful of
+        # compiled exact-scan shapes instead of one per flagged count.
+        idx = np.nonzero(np.asarray(cost >= bound))[0]
+        if idx.size == 0:
+            return res
+        m = 1
+        while m < idx.size:
+            m <<= 1
+        m = min(m, queries.shape[0])
+        pad_idx = np.concatenate(
+            [idx, np.zeros(m - idx.size, idx.dtype)]).astype(np.int32)
+        exact = (self._lookup_sharded(queries[jnp.asarray(pad_idx)])
+                 if self.sharded
+                 else self._lookup_fused(queries[jnp.asarray(pad_idx)]))
+        jidx = jnp.asarray(idx.astype(np.int32))
+        put = lambda dst, src: dst.at[jidx].set(    # noqa: E731
+            src[:idx.size])
+        lvl2 = put(lvl, exact.level)
+        return LookupResult(
+            level=lvl2, slot=put(slot, exact.slot),
+            payload=put(pay, exact.payload),
+            cost=put(cost, exact.cost),
+            approx_cost=put(ca, exact.approx_cost),
+            hit=lvl2 != REPO_LEVEL)
 
     def _lookup_looped(self, queries: jax.Array) -> LookupResult:
         B = queries.shape[0]

@@ -1,11 +1,22 @@
+from repro.kernels.knn.lsh import (CandidatePolicy, CandidateTables,
+                                   KMeansPolicy, SimHashPolicy,
+                                   default_policy, stack_shard_tables)
 from repro.kernels.knn.ops import (fused_lookup, mesh_axes_size,
                                    nearest_approximizer, pad_for_knn,
-                                   sharded_fused_lookup)
+                                   pruned_fused_lookup,
+                                   sharded_fused_lookup,
+                                   sharded_pruned_fused_lookup)
 from repro.kernels.knn.ref import (fused_lookup_ref, knn_ref,
-                                   pad_to_shards, reduce_shard_minima,
-                                   sharded_fused_lookup_ref)
+                                   pad_to_shards, pruned_fused_lookup_ref,
+                                   reduce_shard_minima,
+                                   sharded_fused_lookup_ref,
+                                   sharded_pruned_fused_lookup_ref)
 
 __all__ = ["nearest_approximizer", "pad_for_knn", "knn_ref",
            "fused_lookup", "fused_lookup_ref", "sharded_fused_lookup",
            "sharded_fused_lookup_ref", "reduce_shard_minima",
-           "pad_to_shards", "mesh_axes_size"]
+           "pad_to_shards", "mesh_axes_size", "CandidatePolicy",
+           "CandidateTables", "SimHashPolicy", "KMeansPolicy",
+           "default_policy", "stack_shard_tables", "pruned_fused_lookup",
+           "pruned_fused_lookup_ref", "sharded_pruned_fused_lookup",
+           "sharded_pruned_fused_lookup_ref"]

@@ -1,0 +1,382 @@
+"""LSH / k-means candidate pruning for the fused similarity-cache lookup.
+
+The paper delegates the nearest-approximizer query behind eq. (1) to LSH;
+our fused segmented-1-NN kernel is an *exact* O(ΣK_j·d) scan per request.
+This module adds the candidate pre-filter in front of it: a
+:class:`CandidatePolicy` (SimHash random-hyperplane tables with
+multi-probe, or k-means routing) maps a query batch to a per-query
+candidate matrix of key indices, the batch union of those candidates is
+compacted into one padded, *ascending* index tensor, and the existing
+fused kernel is launched over only the gathered rows. Because the
+segmented layout's ``meta`` rows (level, slot, payload, valid) travel
+with each gathered key, the kernel needs no remapping — and because the
+union is sorted ascending, relative concatenated-index order (hence
+tie-break order) is exactly the full scan's.
+
+Per-shard table layout
+    With the mesh-sharded data plane the tables are built *per shard* of
+    the contiguous balanced ``SimCacheNetwork.sharded_layout(n)`` chunks:
+    shard ``s`` gets its own tables (hyperplanes / centroids drawn from
+    ``policy.for_shard(s)``, bucket member lists holding *shard-local*
+    row indices into its resident chunk), stacked on a leading
+    ``(n_shards, …)`` axis that shard_map partitions alongside the key
+    tensor. Each shard hashes the replicated query batch against its own
+    tables, prunes its resident chunk, and runs its ``fold_repo=False``
+    fused kernel over the gathered rows only; the per-shard minima then
+    flow through the *unchanged* ``reduce_shard_minima`` (ties still to
+    the lowest shard = lowest concatenated index). The candidate mask
+    only ever shrinks a shard's scan — it never changes the reduction or
+    the tie-break order. Bucket-size resolution (n_bits / n_clusters)
+    uses the *chunk length*, identical across shards by construction, so
+    the stacked tables are rectangular; per-shard bucket capacities are
+    padded to the max with −1 sentinels.
+
+Verifier contract (``verify=True``)
+    Pruning is admissible — scanning fewer keys can only *raise* the
+    winning cost — but an LSH miss can return a suboptimal approximizer.
+    Every pruned lookup therefore also returns a **bound**: the minimum
+    retrieval cost ``h`` over the valid keys that were *not* scanned
+    (+INF when the union covered everything). Any un-scanned key costs at
+    least ``C_a ≥ 0`` plus its ``h``, so a pruned result with
+    ``cost < bound`` is *provably* the exact winner — same arithmetic,
+    same kernel, same tie-break — and is accepted as is. ``verify=True``
+    re-scans every query with ``cost ≥ bound`` through the exact path
+    (including exact ties, which could break toward an un-scanned lower
+    index), making the verified result bit-identical to the exact fused
+    lookup by construction, not merely with high probability. The exact
+    scan thus remains the fallback/verifier of last resort, as the
+    ROADMAP requires.
+
+Staleness: tables are memoized next to the fused/sharded layouts and
+dropped by ``SimCacheNetwork.invalidate_layout``. Unlike the plain fused
+path (documented to serve the stale concatenation verbatim), a pruned
+lookup against mutated-but-not-invalidated levels raises loudly — stale
+buckets would silently return candidates into a layout that no longer
+exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_INF = 3.0e38
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateTables:
+    """Built lookup tables of one :class:`CandidatePolicy` over one key
+    segment (the whole fused layout, or one shard's resident chunk).
+
+    ``proj`` is (T, d, n_bits) hyperplane normals for SimHash, (C, d)
+    centroids for k-means routing; ``buckets`` is (T, 2**n_bits, cap) /
+    (C, cap) int32 member lists of segment-local key rows, −1-padded,
+    each bucket's members in ascending row order. ``n_probes`` is the
+    resolved multi-probe count (exact bucket + least-confident bit
+    flips, or the n nearest centroids).
+    """
+    kind: str                 # "lsh" | "kmeans"
+    proj: np.ndarray
+    buckets: np.ndarray
+    n_keys: int
+    n_probes: int
+
+
+@runtime_checkable
+class CandidatePolicy(Protocol):
+    """One interface in front of the fused kernel: build tables over a
+    key segment, later hash query batches into candidate rows."""
+    kind: ClassVar[str]
+    seed: int
+
+    def build(self, keys: np.ndarray, valid: np.ndarray) -> CandidateTables:
+        ...
+
+    def for_shard(self, shard: int) -> "CandidatePolicy":
+        ...
+
+    def resolve_cap(self, n_keys: int) -> int:
+        ...
+
+
+def _resolve_cap(max_candidates: int | None, n_keys: int) -> int:
+    """Static capacity of the batch-union candidate tensor. Overflowing
+    candidates (highest rows) are dropped — admissible, and accounted
+    for by the verify bound, which treats dropped rows as un-scanned."""
+    if max_candidates is not None:
+        return max(1, min(n_keys, max_candidates))
+    return max(1, min(n_keys, max(4096, n_keys // 4)))
+
+
+def _bucket_cap_limit(bucket_cap: int, n_valid: int, n_buckets: int,
+                      over: int = 8) -> int:
+    """Per-bucket member capacity: ``over``× the mean load by default
+    (≥ 16), so one hot bucket of duplicate keys can't inflate the whole
+    dense (tables, buckets, cap) tensor to O(hottest·buckets). Members
+    past the cap (highest rows, the fill is ascending) are dropped at
+    build time — never candidates, i.e. "un-scanned" to the verify
+    bound, which keeps ``verify=True`` exact regardless of skew.
+    k-means passes a larger ``over``: Lloyd clusters skew naturally
+    (dense regions get big clusters) where balanced hash buckets
+    don't."""
+    if bucket_cap:
+        return bucket_cap
+    return max(16, over * -(-n_valid // max(n_buckets, 1)))
+
+
+def _fill_buckets(buckets: np.ndarray, codes: np.ndarray, vi: np.ndarray,
+                  cap: int) -> None:
+    """Fill one table's (n_buckets, cap) member lists from per-key
+    bucket ``codes``; each bucket keeps its first ``cap`` members in
+    ascending key order (stable sort over ascending ``vi``)."""
+    order = np.argsort(codes, kind="stable")
+    cs = codes[order]
+    _, start, cnt = np.unique(cs, return_index=True, return_counts=True)
+    rank = np.arange(cs.size) - np.repeat(start, cnt)
+    keep = rank < cap
+    buckets[cs[keep], rank[keep]] = vi[order][keep]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimHashPolicy:
+    """Random-hyperplane (SimHash) tables with multi-probe.
+
+    ``n_bits=0`` resolves to log2(segment/32) clamped to [2, 16] (≈32
+    keys per bucket); ``n_probes=0`` resolves to 1 + min(n_bits, 3):
+    the exact bucket plus flips of the least-confident (smallest
+    |margin|) bits, the standard multi-probe sequence.
+    """
+    kind: ClassVar[str] = "lsh"
+    n_tables: int = 8
+    n_bits: int = 0
+    n_probes: int = 0
+    bucket_cap: int = 0
+    max_candidates: int | None = None
+    seed: int = 0
+
+    def for_shard(self, shard: int) -> "SimHashPolicy":
+        return dataclasses.replace(self, seed=self.seed + shard + 1)
+
+    def resolve_bits(self, n_keys: int) -> int:
+        if self.n_bits:
+            return self.n_bits
+        return int(np.clip(round(np.log2(max(n_keys, 1) / 32.0)), 2, 16))
+
+    def resolve_probes(self, n_bits: int) -> int:
+        p = self.n_probes or 1 + min(n_bits, 3)
+        return int(np.clip(p, 1, n_bits + 1))
+
+    def resolve_cap(self, n_keys: int) -> int:
+        return _resolve_cap(self.max_candidates, n_keys)
+
+    def build(self, keys: np.ndarray, valid: np.ndarray) -> CandidateTables:
+        keys = np.asarray(keys, np.float32)
+        valid = np.asarray(valid, bool)
+        n_keys, d = keys.shape
+        bits = self.resolve_bits(n_keys)
+        rng = np.random.default_rng(self.seed)
+        planes = rng.standard_normal((self.n_tables, d, bits)) \
+            .astype(np.float32)
+        vi = np.nonzero(valid)[0].astype(np.int32)
+        # per-table loop keeps the (n_valid, bits) margin temporary small
+        codes = np.empty((self.n_tables, vi.size), np.int64)
+        for t in range(self.n_tables):
+            m = keys[vi] @ planes[t]                      # (n_valid, bits)
+            codes[t] = ((m > 0).astype(np.int64)
+                        << np.arange(bits)).sum(-1)
+        cap = 1
+        if vi.size:
+            cap = max(int(np.bincount(codes[t], minlength=2 ** bits).max())
+                      for t in range(self.n_tables))
+            cap = min(cap, _bucket_cap_limit(self.bucket_cap, vi.size,
+                                             2 ** bits))
+        buckets = np.full((self.n_tables, 2 ** bits, cap), -1, np.int32)
+        for t in range(self.n_tables):
+            _fill_buckets(buckets[t], codes[t], vi, cap)
+        return CandidateTables(kind=self.kind, proj=planes, buckets=buckets,
+                               n_keys=n_keys,
+                               n_probes=self.resolve_probes(bits))
+
+
+@dataclasses.dataclass(frozen=True)
+class KMeansPolicy:
+    """k-means routing alternative: keys cluster under Lloyd's algorithm
+    (fit on a subsample, all keys assigned once), a query probes the
+    ``n_probes`` nearest centroids and scans their member lists.
+
+    ``n_clusters=0`` resolves to √segment clamped to [4, 1024];
+    ``n_probes=0`` to a quarter of the clusters clamped to [2, 64] (the
+    generous default that keeps recall ≥ 0.99 on the paper's demands).
+    """
+    kind: ClassVar[str] = "kmeans"
+    n_clusters: int = 0
+    n_probes: int = 0
+    n_iters: int = 10
+    fit_sample: int = 20_000
+    bucket_cap: int = 0
+    max_candidates: int | None = None
+    seed: int = 0
+
+    def for_shard(self, shard: int) -> "KMeansPolicy":
+        return dataclasses.replace(self, seed=self.seed + shard + 1)
+
+    def resolve_clusters(self, n_keys: int) -> int:
+        if self.n_clusters:
+            return self.n_clusters
+        return int(np.clip(round(np.sqrt(max(n_keys, 1))), 4, 1024))
+
+    def resolve_probes(self, n_clusters: int) -> int:
+        p = self.n_probes or int(np.clip(round(n_clusters / 4), 2, 64))
+        return int(np.clip(p, 1, n_clusters))
+
+    def resolve_cap(self, n_keys: int) -> int:
+        return _resolve_cap(self.max_candidates, n_keys)
+
+    def build(self, keys: np.ndarray, valid: np.ndarray) -> CandidateTables:
+        keys = np.asarray(keys, np.float32)
+        valid = np.asarray(valid, bool)
+        n_keys, d = keys.shape
+        C = self.resolve_clusters(n_keys)
+        rng = np.random.default_rng(self.seed)
+        vi = np.nonzero(valid)[0].astype(np.int32)
+        if vi.size == 0:
+            return CandidateTables(
+                kind=self.kind, proj=np.zeros((C, d), np.float32),
+                buckets=np.full((C, 1), -1, np.int32), n_keys=n_keys,
+                n_probes=self.resolve_probes(C))
+        x = keys[vi]
+        sub = x[rng.choice(vi.size, min(vi.size, self.fit_sample),
+                           replace=False)]
+        cent = x[rng.choice(vi.size, C, replace=vi.size < C)].copy()
+        for _ in range(self.n_iters):
+            a = _nearest_centroid(sub, cent)
+            for c in range(C):
+                m = a == c
+                if m.any():
+                    cent[c] = sub[m].mean(axis=0)
+        assign = _nearest_centroid(x, cent)
+        cap = max(1, int(np.bincount(assign, minlength=C).max()))
+        cap = min(cap, _bucket_cap_limit(self.bucket_cap, vi.size, C,
+                                         over=16))
+        buckets = np.full((C, cap), -1, np.int32)
+        _fill_buckets(buckets, assign, vi, cap)
+        return CandidateTables(kind=self.kind, proj=cent, buckets=buckets,
+                               n_keys=n_keys, n_probes=self.resolve_probes(C))
+
+
+def _nearest_centroid(x: np.ndarray, cent: np.ndarray,
+                      chunk: int = 65_536) -> np.ndarray:
+    """Chunked argmin over centroids: the (chunk, C) distance block caps
+    build-time memory at ~chunk·C f32 however large the key segment."""
+    c2 = (cent * cent).sum(-1)[None, :]
+    out = np.empty(x.shape[0], np.int64)
+    for s in range(0, x.shape[0], chunk):
+        xs = x[s:s + chunk]
+        d2 = (xs * xs).sum(-1)[:, None] + c2 - 2.0 * xs @ cent.T
+        out[s:s + chunk] = np.argmin(d2, axis=1)
+    return out
+
+
+def default_policy(kind: str, seed: int = 0) -> CandidatePolicy:
+    if kind == "lsh":
+        return SimHashPolicy(seed=seed)
+    if kind == "kmeans":
+        return KMeansPolicy(seed=seed)
+    raise ValueError(f"unknown candidate policy {kind!r} "
+                     "(expected 'lsh' or 'kmeans')")
+
+
+# ------------------------------------------------------------ query side
+def candidate_matrix(kind: str, proj: jax.Array, buckets: jax.Array,
+                     queries: jax.Array, n_probes: int) -> jax.Array:
+    """(B, P) candidate rows per query, −1-padded; jit-traceable.
+
+    SimHash: per table, the query's own bucket plus ``n_probes − 1``
+    buckets at Hamming distance 1, flipping the least-confident bits
+    (smallest |margin|) first. k-means: the ``n_probes`` nearest
+    centroids' member lists.
+    """
+    q = queries.astype(jnp.float32)
+    if kind == "lsh":
+        T, _, bits = proj.shape
+        margins = jnp.einsum("bd,tdh->bth", q, proj)       # (B, T, bits)
+        weights = (1 << jnp.arange(bits, dtype=jnp.int32))
+        code = jnp.sum((margins > 0) * weights, axis=-1,
+                       dtype=jnp.int32)                    # (B, T)
+        if n_probes > 1:
+            order = jnp.argsort(jnp.abs(margins), axis=-1)  # least sure 1st
+            flips = (1 << order[..., :n_probes - 1].astype(jnp.int32))
+            codes = jnp.concatenate(
+                [code[..., None], code[..., None] ^ flips], axis=-1)
+        else:
+            codes = code[..., None]                        # (B, T, P)
+        cand = buckets[jnp.arange(T)[None, :, None], codes]
+        return cand.reshape(q.shape[0], -1)
+    if kind == "kmeans":
+        d2 = (jnp.sum(q * q, -1)[:, None]
+              + jnp.sum(proj * proj, -1)[None, :]
+              - 2.0 * q @ proj.T)                          # (B, C)
+        _, idx = jax.lax.top_k(-d2, n_probes)
+        return buckets[idx].reshape(q.shape[0], -1)
+    raise ValueError(kind)
+
+
+def candidate_union(cand: jax.Array, n_keys: int, cap: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Batch union of (B, P) candidates → (``kept``, ``kept_mask``).
+
+    ``kept`` is the compact padded index tensor: the first ``cap``
+    distinct candidate rows in *ascending* order (preserving the full
+    scan's tie-break order), padded with ``n_keys``; ``kept_mask`` (K,)
+    marks rows that actually get scanned, so the verify bound can count
+    everything else — including overflow drops — as un-scanned.
+    """
+    c = jnp.where(cand >= 0, cand, n_keys).reshape(-1)
+    mask = jnp.zeros((n_keys + 1,), bool).at[c].set(True, mode="drop")
+    mask = mask.at[n_keys].set(False)
+    kept = jnp.nonzero(mask, size=cap, fill_value=n_keys)[0] \
+        .astype(jnp.int32)
+    kept_mask = jnp.zeros((n_keys + 1,), bool) \
+        .at[kept].set(True, mode="drop")[:n_keys]
+    return kept, kept_mask
+
+
+def gather_candidate_rows(keys: jax.Array, h_key: jax.Array,
+                          meta: jax.Array, kept: jax.Array
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Gather the kept rows of the segmented layout; the padding index
+    ``n_keys`` resolves to an appended invalid row (valid = 0, payload =
+    −1) that the fused kernel masks exactly like shard padding."""
+    pad_key = jnp.zeros((1, keys.shape[1]), keys.dtype)
+    pad_meta = jnp.array([[0], [0], [-1], [0]], meta.dtype)
+    keys_e = jnp.concatenate([keys, pad_key])
+    h_e = jnp.concatenate([h_key.astype(jnp.float32), jnp.zeros((1,))])
+    meta_e = jnp.concatenate([meta, pad_meta], axis=1)
+    return keys_e[kept], h_e[kept], meta_e[:, kept]
+
+
+def unscanned_h_bound(h_key: jax.Array, meta: jax.Array,
+                      kept_mask: jax.Array) -> jax.Array:
+    """Scalar verify bound: min h over valid keys *outside* the scanned
+    union (+INF when it covered everything). Any un-scanned key costs at
+    least this, so ``cost < bound`` proves the pruned winner exact."""
+    outside = (meta[3, :] > 0) & ~kept_mask
+    return jnp.min(jnp.where(outside, h_key.astype(jnp.float32), _INF))
+
+
+def stack_shard_tables(tables: list[CandidateTables]
+                       ) -> tuple[np.ndarray, np.ndarray, int]:
+    """Stack per-shard tables on a leading (n_shards, …) axis for
+    shard_map, padding bucket capacities to the max with −1."""
+    cap = max(t.buckets.shape[-1] for t in tables)
+    padded = [np.concatenate(
+        [t.buckets,
+         np.full(t.buckets.shape[:-1] + (cap - t.buckets.shape[-1],), -1,
+                 np.int32)], axis=-1) for t in tables]
+    probes = {t.n_probes for t in tables}
+    assert len(probes) == 1, "shards resolved different probe counts"
+    return (np.stack([t.proj for t in tables]), np.stack(padded),
+            probes.pop())

@@ -27,6 +27,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.kernels.knn.knn import (DEFAULT_BK, DEFAULT_BQ, _INF,
                                    fused_lookup_pallas, knn_pallas)
+from repro.kernels.knn.lsh import (candidate_matrix, candidate_union,
+                                   gather_candidate_rows, unscanned_h_bound)
 from repro.kernels.knn.ref import (fused_lookup_ref, knn_ref,
                                    reduce_shard_minima)
 
@@ -199,3 +201,100 @@ def sharded_fused_lookup(queries: jax.Array, keys: jax.Array,
         check_rep=False)(queries, keys, h_key, meta)
     return reduce_shard_minima(*parts, h_repo=h_repo,
                                repo_level=repo_level)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "n_probes", "cap_union", "metric", "gamma", "h_repo",
+    "repo_level", "bq", "bk", "use_pallas", "interpret", "fold_repo"))
+def pruned_fused_lookup(queries: jax.Array, keys: jax.Array,
+                        h_key: jax.Array, meta: jax.Array, proj: jax.Array,
+                        buckets: jax.Array, kind: str = "lsh",
+                        n_probes: int = 1, cap_union: int = 512,
+                        metric: str = "l2", gamma: float = 1.0,
+                        h_repo: float = 0.0, repo_level: int = -1,
+                        bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                        use_pallas: bool = True,
+                        interpret: bool | None = None,
+                        fold_repo: bool = True) -> tuple[jax.Array, ...]:
+    """Gather-variant entry: LSH/k-means candidate pre-filter in front of
+    the *existing* fused kernel (see kernels.knn.lsh).
+
+    The query batch is hashed against ``proj``/``buckets`` (one
+    CandidatePolicy's built tables over this key segment), the batch
+    union of candidate rows is compacted into one ascending padded index
+    tensor of static size ``cap_union``, and :func:`fused_lookup` runs
+    over only the gathered (keys, h_key, meta) rows — same arithmetic,
+    same masking, same tie-break order as the exact scan, on a fraction
+    of the keys. Returns (cost, approx_cost, level, slot, payload,
+    bound): ``bound`` is the min h over valid *un-scanned* keys (+INF if
+    none), the verifier's accept threshold (``cost < bound`` proves the
+    pruned result exact — lsh.py's verifier contract).
+    """
+    if keys.shape[0] == 0:          # no cache keys at all → repository
+        out = fused_lookup(queries, keys, h_key, meta, metric=metric,
+                           gamma=gamma, h_repo=h_repo,
+                           repo_level=repo_level, bq=bq, bk=bk,
+                           use_pallas=use_pallas, interpret=interpret,
+                           fold_repo=fold_repo)
+        return (*out, jnp.float32(_INF))
+    cand = candidate_matrix(kind, proj, buckets, queries, n_probes)
+    kept, kept_mask = candidate_union(cand, keys.shape[0], cap_union)
+    gk, gh, gm = gather_candidate_rows(keys, h_key, meta, kept)
+    out = fused_lookup(queries, gk, gh, gm, metric=metric, gamma=gamma,
+                       h_repo=h_repo, repo_level=repo_level, bq=bq, bk=bk,
+                       use_pallas=use_pallas, interpret=interpret,
+                       fold_repo=fold_repo)
+    return (*out, unscanned_h_bound(h_key, meta, kept_mask))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mesh", "axes", "kind", "n_probes", "cap_union", "metric", "gamma",
+    "h_repo", "repo_level", "bq", "bk", "use_pallas", "interpret"))
+def sharded_pruned_fused_lookup(queries: jax.Array, keys: jax.Array,
+                                h_key: jax.Array, meta: jax.Array,
+                                proj_s: jax.Array, buckets_s: jax.Array,
+                                mesh, axes: tuple[str, ...],
+                                kind: str = "lsh", n_probes: int = 1,
+                                cap_union: int = 512, metric: str = "l2",
+                                gamma: float = 1.0, h_repo: float = 0.0,
+                                repo_level: int = -1, bq: int = DEFAULT_BQ,
+                                bk: int = DEFAULT_BK,
+                                use_pallas: bool = True,
+                                interpret: bool | None = None
+                                ) -> tuple[jax.Array, ...]:
+    """Mesh-sharded pruned lookup: per-shard tables prune each shard's
+    resident chunk before its ``fold_repo=False`` fused-kernel launch.
+
+    ``proj_s``/``buckets_s`` carry a leading (n_shards, …) axis (built
+    via lsh.stack_shard_tables) that shard_map partitions together with
+    the key tensor, so every shard hashes the replicated queries against
+    its *own* tables and scans only its local candidate union.
+    ``reduce_shard_minima`` and the tie-break order are untouched — the
+    candidate mask only shrinks a shard's scan. The returned ``bound``
+    is the min over shards of each shard's un-scanned-h bound, sound for
+    the same verify contract as the single-device entry.
+    """
+    n_shards = mesh_axes_size(mesh, axes)
+    K = keys.shape[0]
+    assert K % n_shards == 0, (K, n_shards)
+    spec = P(tuple(axes))
+
+    def shard_fn(q, k, hk, m, pj, bks):
+        cost, ca, lvl, slot, pay, bound = pruned_fused_lookup(
+            q, k, hk, m, pj[0], bks[0], kind=kind, n_probes=n_probes,
+            cap_union=cap_union, metric=metric, gamma=gamma, h_repo=h_repo,
+            repo_level=repo_level, bq=bq, bk=bk, use_pallas=use_pallas,
+            interpret=interpret, fold_repo=False)
+        return (cost[None], ca[None], lvl[None], slot[None], pay[None],
+                bound[None])
+
+    parts = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), spec, spec, P(None, tuple(axes)),
+                  P(tuple(axes)), P(tuple(axes))),
+        out_specs=(spec,) * 6,
+        check_rep=False)(queries, keys, h_key, meta, proj_s, buckets_s)
+    *minima, bounds = parts
+    red = reduce_shard_minima(*minima, h_repo=h_repo,
+                              repo_level=repo_level)
+    return (*red, jnp.min(bounds))

@@ -126,6 +126,66 @@ def reduce_shard_minima(cost_s: jnp.ndarray, ca_s: jnp.ndarray,
             i32(jnp.where(use_repo, -1, bpay)))
 
 
+def pruned_fused_lookup_ref(queries: jnp.ndarray, keys: jnp.ndarray,
+                            h_key: jnp.ndarray, meta: jnp.ndarray,
+                            tables, cap_union: int, metric: str = "l2",
+                            gamma: float = 1.0, h_repo: float = 0.0,
+                            repo_level: int = -1, fold_repo: bool = True
+                            ) -> tuple[jnp.ndarray, ...]:
+    """Oracle for the pruned gather-variant lookup (ops.
+    pruned_fused_lookup): identical candidate hashing, union, and row
+    gather (shared helpers in kernels.knn.lsh), but the scan runs
+    through :func:`fused_lookup_ref` instead of the Pallas kernel.
+    ``tables`` is a lsh.CandidateTables. Returns the same
+    (cost, approx_cost, level, slot, payload, bound) tuple.
+    """
+    from repro.kernels.knn.lsh import (candidate_matrix, candidate_union,
+                                       gather_candidate_rows,
+                                       unscanned_h_bound)
+    if keys.shape[0] == 0:
+        out = fused_lookup_ref(queries, keys, h_key, meta, metric=metric,
+                               gamma=gamma, h_repo=h_repo,
+                               repo_level=repo_level, fold_repo=fold_repo)
+        return (*out, jnp.float32(_INF))
+    cand = candidate_matrix(tables.kind, jnp.asarray(tables.proj),
+                            jnp.asarray(tables.buckets), queries,
+                            tables.n_probes)
+    kept, kept_mask = candidate_union(cand, keys.shape[0], cap_union)
+    gk, gh, gm = gather_candidate_rows(keys, h_key, meta, kept)
+    out = fused_lookup_ref(queries, gk, gh, gm, metric=metric, gamma=gamma,
+                           h_repo=h_repo, repo_level=repo_level,
+                           fold_repo=fold_repo)
+    return (*out, unscanned_h_bound(h_key, meta, kept_mask))
+
+
+def sharded_pruned_fused_lookup_ref(queries: jnp.ndarray,
+                                    keys: jnp.ndarray, h_key: jnp.ndarray,
+                                    meta: jnp.ndarray, tables: list,
+                                    cap_union: int, metric: str = "l2",
+                                    gamma: float = 1.0, h_repo: float = 0.0,
+                                    repo_level: int = -1
+                                    ) -> tuple[jnp.ndarray, ...]:
+    """Mesh-free oracle of ops.sharded_pruned_fused_lookup: chunk the
+    (already shard-padded) key tensor into ``len(tables)`` contiguous
+    balanced chunks, prune each with its *own* per-shard tables
+    (``fold_repo=False``), reduce with the untouched
+    :func:`reduce_shard_minima`, and return the min of the per-shard
+    un-scanned-h bounds. Runs on one device at any shard count, like
+    :func:`sharded_fused_lookup_ref`.
+    """
+    n_shards = len(tables)
+    keys, h_key, meta = pad_to_shards(keys, h_key, meta, n_shards)
+    S = keys.shape[0] // n_shards
+    parts = [pruned_fused_lookup_ref(
+        queries, keys[s * S:(s + 1) * S], h_key[s * S:(s + 1) * S],
+        meta[:, s * S:(s + 1) * S], tables[s], cap_union, metric=metric,
+        gamma=gamma, h_repo=h_repo, repo_level=repo_level,
+        fold_repo=False) for s in range(n_shards)]
+    stk = [jnp.stack([p[i] for p in parts]) for i in range(5)]
+    red = reduce_shard_minima(*stk, h_repo=h_repo, repo_level=repo_level)
+    return (*red, jnp.min(jnp.stack([p[5] for p in parts])))
+
+
 def sharded_fused_lookup_ref(queries: jnp.ndarray, keys: jnp.ndarray,
                              h_key: jnp.ndarray, meta: jnp.ndarray,
                              n_shards: int, metric: str = "l2",

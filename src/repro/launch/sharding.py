@@ -277,25 +277,45 @@ class LookupShardPolicy:
     first: lookup shards and tensor-parallel shards then live on the
     same devices, so cache keys sit next to the KV-prefix payloads they
     index.
+
+    ``prune`` additionally selects the per-shard candidate-pruning
+    tables (kernels.knn.lsh): each shard of the balanced contiguous key
+    layout builds its *own* SimHash / k-means tables over its resident
+    chunk, seeded from ``table_seed`` (shard s draws from
+    ``policy.for_shard(s)``, so hyperplanes/centroids are independent
+    across shards while the whole fleet stays reproducible).
     """
     mesh: Mesh
     axes: tuple[str, ...]
+    prune: str | None = None
+    table_seed: int = 0
 
     @classmethod
     def create(cls, mesh: Mesh,
-               candidates: tuple[str, ...] = ("model", "data", "pod")
-               ) -> "LookupShardPolicy":
+               candidates: tuple[str, ...] = ("model", "data", "pod"),
+               prune: str | None = None,
+               table_seed: int = 0) -> "LookupShardPolicy":
         present = tuple(ax for ax in candidates if ax in mesh.shape)
         if not present:                  # unrecognised axes: use them all
             present = tuple(mesh.axis_names)
         total = mesh_axes_size(mesh, present)
         spec = _resolve((total,), ("keys",), {"keys": present}, mesh)
         axes = spec[0] if spec[0] is not None else ()
-        return cls(mesh=mesh, axes=tuple(axes))
+        return cls(mesh=mesh, axes=tuple(axes), prune=prune,
+                   table_seed=table_seed)
 
     @property
     def n_shards(self) -> int:
         return mesh_axes_size(self.mesh, self.axes)
+
+    def candidate_policy(self):
+        """The base CandidatePolicy for this deployment (None when
+        pruning is off); SimCacheNetwork derives per-shard tables from
+        it via ``for_shard``."""
+        if self.prune is None:
+            return None
+        from repro.kernels.knn.lsh import default_policy
+        return default_policy(self.prune, seed=self.table_seed)
 
 
 def replicated(mesh: Mesh) -> NamedSharding:

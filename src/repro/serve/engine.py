@@ -14,7 +14,11 @@ tensor is partitioned across the mesh axes picked by
 ``LookupShardPolicy`` and each device scans only its resident shard
 (one fused kernel per shard + a tiny cross-shard reduction,
 bit-identical results) — the catalog then scales with the mesh instead
-of a single device's memory.
+of a single device's memory. ``EngineConfig.prune`` ("lsh" | "kmeans")
+puts the candidate pre-filter of kernels/knn/lsh.py in front of the
+scan (per shard when sharded) for catalogs ≫ 10⁵ keys;
+``EngineConfig.verify`` keeps the exact scan as the verifier of last
+resort, re-scanning any query past the pruning bound.
 
 Cost-unit calibration: ``h`` values and C_a live in the same unit —
 milliseconds of serving latency — via :meth:`calibrate`, which times one
@@ -67,6 +71,8 @@ class EngineConfig:
     algo: str = "cascade"         # greedy | localswap | cascade
     fused: bool = True            # single fused lookup kernel per batch
     sharded: bool = False         # mesh-sharded keys (needs engine mesh)
+    prune: str | None = None      # "lsh" | "kmeans" candidate pre-filter
+    verify: bool = False          # exact re-scan past the pruning bound
 
 
 @dataclasses.dataclass
@@ -106,7 +112,8 @@ class SimCacheEngine:
         # key-axis shard policy for the sharded data plane: resolved once
         # from the mesh, reused on every placement refresh
         self.mesh = mesh
-        self.lookup_shards = (LookupShardPolicy.create(mesh)
+        self.lookup_shards = (LookupShardPolicy.create(mesh,
+                                                       prune=ecfg.prune)
                               if mesh is not None else None)
         if ecfg.sharded and mesh is None:
             raise ValueError("EngineConfig.sharded requires a mesh")
@@ -157,7 +164,9 @@ class SimCacheEngine:
             fused=self.ecfg.fused, sharded=self.ecfg.sharded,
             mesh=self.mesh,
             shard_axes=(self.lookup_shards.axes
-                        if self.lookup_shards else None))
+                        if self.lookup_shards else None),
+            candidate_policy=(self.lookup_shards.candidate_policy()
+                              if self.lookup_shards else None))
         return inst.total_cost(slots)
 
     # --------------------------------------------------------- data plane
@@ -173,7 +182,8 @@ class SimCacheEngine:
             miss_idx = np.arange(len(request_ids))
         else:
             q = jnp.asarray(self.coords[request_ids])
-            res = self.simcache.lookup(q)
+            res = self.simcache.lookup(q, prune=self.ecfg.prune,
+                                       verify=self.ecfg.verify)
             hits = np.asarray(res.hit)
             payloads = np.asarray(res.payload)
             self.stats.total_cost += float(np.sum(np.asarray(res.cost)))

@@ -121,6 +121,57 @@ def _install_hypothesis_stub() -> None:
 _install_hypothesis_stub()
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: nightly/full-pass only (scripts/ci.sh deselects with "
+        '-m "not slow"; CI_FULL=1 runs them)')
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+# --------------------------------------------------------------------------
+# Shared helpers of the lookup differential suites (test_fused_lookup,
+# test_sharded_lookup, test_lsh_pruning): one definition of "a random
+# multi-level network" and of "two LookupResults agree".
+def make_net(seed, sizes, hs, h_repo, metric="l2", gamma=1.0, d=6,
+             empty=(), **kw):
+    """Random multi-level SimCacheNetwork (levels in ``empty`` get the
+    sentinel key of an empty level) plus the rng for query draws."""
+    import jax.numpy as jnp
+
+    from repro.core.simcache import (SENTINEL_COORD, CacheLevel,
+                                     SimCacheNetwork)
+    rng_ = np.random.default_rng(seed)
+    levels = []
+    for j, (k, h) in enumerate(zip(sizes, hs)):
+        if j in empty:
+            keys = np.full((1, d), SENTINEL_COORD, np.float32)
+            vals = np.full((1,), -1, np.int32)
+        else:
+            keys = (rng_.standard_normal((k, d)) * 2).astype(np.float32)
+            vals = rng_.integers(0, 10_000, k).astype(np.int32)
+        levels.append(CacheLevel(keys=jnp.asarray(keys),
+                                 values=jnp.asarray(vals), h=float(h)))
+    return SimCacheNetwork(levels=levels, h_repo=float(h_repo),
+                           metric=metric, gamma=gamma, **kw), rng_
+
+
+def assert_results_equal(a, b, exact_cost=True):
+    """Two LookupResults serve identical traffic: equal winners always,
+    costs bitwise for γ = 1 (``exact_cost``) else to 1e-6 (FMA
+    contraction may differ across kernels)."""
+    for name in ("level", "slot", "payload", "hit"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=name)
+    for name in ("cost", "approx_cost"):
+        x, y = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        if exact_cost:
+            np.testing.assert_array_equal(x, y, err_msg=name)
+        else:
+            np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-6,
+                                       err_msg=name)

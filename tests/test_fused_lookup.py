@@ -19,45 +19,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import assert_results_equal as assert_lookups_equal
+from conftest import make_net
 
-from repro.core.simcache import (REPO_LEVEL, SENTINEL_COORD, CacheLevel,
-                                 SimCacheNetwork)
+from repro.core.simcache import REPO_LEVEL, CacheLevel, SimCacheNetwork
 from repro.kernels.knn import fused_lookup, fused_lookup_ref
-
-
-def make_net(seed, sizes, hs, h_repo, metric="l2", gamma=1.0, d=6,
-             empty=(), use_pallas=True, fused=True):
-    rng = np.random.default_rng(seed)
-    levels = []
-    for j, (k, h) in enumerate(zip(sizes, hs)):
-        if j in empty:
-            keys = np.full((1, d), SENTINEL_COORD, np.float32)
-            vals = np.full((1,), -1, np.int32)
-        else:
-            keys = (rng.standard_normal((k, d)) * 2).astype(np.float32)
-            vals = rng.integers(0, 10_000, k).astype(np.int32)
-        levels.append(CacheLevel(keys=jnp.asarray(keys),
-                                 values=jnp.asarray(vals), h=float(h)))
-    return SimCacheNetwork(levels=levels, h_repo=float(h_repo),
-                           metric=metric, gamma=gamma,
-                           use_pallas=use_pallas, fused=fused), rng
-
-
-def assert_lookups_equal(fused_res, looped_res, exact_cost=True):
-    for name in ("level", "slot", "payload"):
-        np.testing.assert_array_equal(
-            np.asarray(getattr(fused_res, name)),
-            np.asarray(getattr(looped_res, name)), err_msg=name)
-    np.testing.assert_array_equal(np.asarray(fused_res.hit),
-                                  np.asarray(looped_res.hit))
-    for name in ("cost", "approx_cost"):
-        a = np.asarray(getattr(fused_res, name))
-        b = np.asarray(getattr(looped_res, name))
-        if exact_cost:
-            np.testing.assert_array_equal(a, b, err_msg=name)
-        else:
-            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6,
-                                       err_msg=name)
 
 
 @pytest.mark.parametrize("metric", ["l1", "l2", "l2sq"])

@@ -7,10 +7,14 @@ The paper's structural claims, checked on randomized instances:
   * Prop 3.3 — localswap_polish fixed points are locally optimal;
   * Remark 1 — cascade cost ≤ greedy cost, and still ≥ ½·OPT gain;
   * eq. (1) — serving cost never exceeds the repository cost, and adding
-    any approximizer never increases any request's cost.
+    any approximizer never increases any request's cost;
+  * LSH/k-means candidate pruning (kernels/knn/lsh.py) — admissibility
+    (scanning fewer keys can only raise the winning cost) and the
+    verifier contract (``verify=True`` closes the pruning gap to 0).
 """
 import itertools
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -19,6 +23,7 @@ from repro.core import catalog, demand, topology
 from repro.core.objective import Instance, random_slots
 from repro.core.placement import greedy, greedy_then_localswap, localswap_polish
 from repro.core.placement.localswap import is_locally_optimal
+from repro.core.simcache import SimCacheNetwork
 
 
 def make_random_instance(seed, n_obj=6, dim=2, k=(1, 1), h=0.5, h_repo=3.0,
@@ -117,6 +122,61 @@ def test_cascade_dominates_greedy_and_half_opt(seed):
     best_gain = max(inst.caching_gain(np.array(c, np.int64))
                     for c in itertools.product(range(5), repeat=2))
     assert inst.caching_gain(casc.slots) >= 0.5 * best_gain - 1e-9
+
+
+def _sampled_placement_net(seed):
+    """A random placement turned into a runtime network plus a query
+    batch sampled from a random demand — the pruning properties must
+    hold for *every* such draw."""
+    rng = np.random.default_rng(seed)
+    n_obj = int(rng.integers(40, 120))
+    cat = catalog.embedding_catalog(n=n_obj, dim=int(rng.integers(2, 8)),
+                                    seed=seed)
+    lam = rng.random((1, n_obj)) + 0.01
+    dem = demand.Demand(lam=lam / lam.sum())
+    k0, k1 = int(rng.integers(1, 20)), int(rng.integers(1, 20))
+    stored = rng.choice(n_obj, k0 + k1, replace=False)
+    slots = np.concatenate([stored, np.full(2, -1)]).astype(np.int64)
+    slot_cache = np.array([0] * k0 + [1] * (k1 + 2))
+    net = SimCacheNetwork.from_placement(
+        cat.coords, slots, slot_cache, hs=[0.0, 0.5],
+        h_repo=float(rng.uniform(0.5, 5.0)), metric="l2")
+    obj, _ = dem.sample(int(rng.integers(1, 64)), rng)
+    q = jnp.asarray(cat.coords[obj]
+                    + rng.normal(0, 0.1, (obj.size, cat.dim))
+                    .astype(np.float32))
+    return net, q
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       prune=st.sampled_from(["lsh", "kmeans"]))
+def test_pruned_lookup_cost_admissible(seed, prune):
+    """Admissibility: the pruned lookup scans a subset of the keys, so
+    its winning cost is ≥ the exact fused cost for every query of every
+    sampled placement/batch — pruning can hide the winner, never invent
+    a cheaper one."""
+    net, q = _sampled_placement_net(seed)
+    pruned = net.lookup(q, prune=prune)
+    exact = net._lookup_fused(q)
+    assert np.all(np.asarray(pruned.cost) >= np.asarray(exact.cost))
+    assert np.all(np.asarray(pruned.cost) <= net.h_repo + 1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       prune=st.sampled_from(["lsh", "kmeans"]))
+def test_pruned_verify_closes_gap(seed, prune):
+    """verify=True closes the pruning gap to 0 — bit-identical winners
+    *and* costs vs the exact fused path, for every sampled
+    placement/query batch."""
+    net, q = _sampled_placement_net(seed)
+    res = net.lookup(q, prune=prune, verify=True)
+    exact = net._lookup_fused(q)
+    for name in ("level", "slot", "payload", "cost", "approx_cost"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res, name)),
+            np.asarray(getattr(exact, name)), err_msg=name)
 
 
 @settings(max_examples=15, deadline=None)

@@ -36,44 +36,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import assert_results_equal, make_net
 
-from repro.core.simcache import (REPO_LEVEL, SENTINEL_COORD, CacheLevel,
-                                 SimCacheNetwork)
+from repro.core.simcache import REPO_LEVEL, CacheLevel, SimCacheNetwork
 from repro.kernels.knn import sharded_fused_lookup_ref
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 EIGHT = jax.device_count() >= 8
-
-
-def make_net(seed, sizes, hs, h_repo, metric="l2", gamma=1.0, d=6,
-             empty=(), **kw):
-    rng = np.random.default_rng(seed)
-    levels = []
-    for j, (k, h) in enumerate(zip(sizes, hs)):
-        if j in empty:
-            keys = np.full((1, d), SENTINEL_COORD, np.float32)
-            vals = np.full((1,), -1, np.int32)
-        else:
-            keys = (rng.standard_normal((k, d)) * 2).astype(np.float32)
-            vals = rng.integers(0, 10_000, k).astype(np.int32)
-        levels.append(CacheLevel(keys=jnp.asarray(keys),
-                                 values=jnp.asarray(vals), h=float(h)))
-    return SimCacheNetwork(levels=levels, h_repo=float(h_repo),
-                           metric=metric, gamma=gamma, **kw), rng
-
-
-def assert_results_equal(a, b, exact_cost=True):
-    for name in ("level", "slot", "payload", "hit"):
-        np.testing.assert_array_equal(
-            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
-            err_msg=name)
-    for name in ("cost", "approx_cost"):
-        x, y = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
-        if exact_cost:
-            np.testing.assert_array_equal(x, y, err_msg=name)
-        else:
-            np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-6,
-                                       err_msg=name)
 
 
 # --------------------------------------------------------------- oracle
