@@ -1,0 +1,88 @@
+"""Placement control-plane benchmark: host NumPy oracles vs the
+device-resident gain oracle (kernels/knn/gains.py + DeviceInstance).
+
+Rows:
+
+* ``gain_oracle/O…`` — one full (O, J) marginal-gain evaluation (the
+  per-step cost GREEDY/LOCALSWAP pay at refresh time) on a Zipf
+  embedding instance, host ``Instance.add_gain_all`` (cached C_a
+  matrix while it fits, streamed row blocks past
+  ``objective.CA_MATERIALIZE_MAX``) vs ``DeviceInstance.gains``
+  (streamed distance tiles, one jitted launch). O ∈ {10³, 10⁴} by
+  default; ``PLACEMENT_BENCH_FULL=1`` (the KERNEL_BENCH_FULL-style
+  nightly gate, see scripts/ci.sh) adds the 10⁵ row, where the dense
+  host C_a can no longer exist at all.
+* ``greedy/O…`` — end-to-end GREEDY solve, host lazy heap vs device
+  batched lazy (bit-identical allocations, asserted).
+
+Timings are CPU/interpret-grade (same caveat as kernel_bench.py): the
+point is the host-vs-device *ratio* of the control plane, recorded in
+results/bench/placement.json.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_jax, csv_line, save_json, timed
+from repro.core import catalog, demand, topology
+from repro.core.objective import DeviceInstance, Instance
+from repro.core.placement import device_greedy, greedy
+
+
+def make_instance(n: int, dim: int = 16, seed: int = 0,
+                  k: int = 64) -> Instance:
+    cat = catalog.embedding_catalog(n=n, dim=dim, seed=seed)
+    net = topology.tandem(k_leaf=k, k_parent=k, h=50.0, h_repo=500.0)
+    dem = demand.zipf(cat, alpha=0.8, seed=seed + 1)
+    return Instance(net=net, cat=cat, dem=dem)
+
+
+def initial_cur(inst: Instance) -> np.ndarray:
+    return np.repeat(inst.net.h_repo[:, None].astype(np.float64),
+                     inst.cat.n, axis=1)
+
+
+def run() -> dict:
+    rows = []
+    sizes = [1_000, 10_000]
+    if os.environ.get("PLACEMENT_BENCH_FULL"):
+        sizes.append(100_000)
+    for n in sizes:
+        inst = make_instance(n)
+        cur = initial_cur(inst)
+        if n <= 10_000:
+            inst.ca                       # warm the cached C_a (host path)
+        _, t_host = timed(inst.add_gain_all, cur)
+        dinst = DeviceInstance.from_instance(inst, materialize_ca=False)
+        cur_dev = jnp.asarray(cur, jnp.float32)
+        t_dev = bench_jax(dinst.gains, cur_dev,
+                          repeat=3 if n <= 10_000 else 1)
+        name = f"gain_oracle/O{n}_J2_D16"
+        rows.append({"name": name, "host_s": t_host, "device_s": t_dev,
+                     "speedup": t_host / t_dev})
+        csv_line(name, t_dev * 1e6,
+                 f"host_s={t_host:.3f},speedup={t_host/t_dev:.1f}x")
+    # end-to-end GREEDY, 128 picks: at 10³ candidates the host lazy heap
+    # wins (the device loop is jit-dispatch-bound), at 10⁴ the oracle
+    # cost dominates and the device path takes over — recorded at both
+    # sizes so the crossover is visible.
+    for n in (1_000, 10_000):
+        inst = make_instance(n)
+        hs, t_hg = timed(greedy, inst)
+        dinst = DeviceInstance.from_instance(inst, materialize_ca=False)
+        ds, t_dg = timed(device_greedy, dinst)
+        assert np.array_equal(hs, ds), "device allocation diverged from host"
+        name = f"greedy/O{n}_K128"
+        rows.append({"name": name, "host_s": t_hg, "device_s": t_dg,
+                     "speedup": t_hg / t_dg, "allocations_equal": True})
+        csv_line(name, t_dg * 1e6,
+                 f"host_s={t_hg:.3f},speedup={t_hg/t_dg:.1f}x,bit_identical")
+    save_json("placement.json", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -22,6 +22,15 @@
 # env gate). Pass 2 keeps the deselect even then: the slow tests are
 # device-count independent, so rerunning them 8-way adds nothing —
 # the same rationale as the *_subprocess deselect.
+#
+# The differential placement suite (tests/test_device_placement.py —
+# device GREEDY/LOCALSWAP bit-identical to the NumPy oracles) runs in
+# BOTH passes: its mesh tests build over every visible device, so pass
+# 1 exercises the 1-shard gain oracle and pass 2 the real 8-way
+# candidate sharding. The nightly pass additionally runs the placement
+# control-plane benchmark with its PLACEMENT_BENCH_FULL gate open
+# (KERNEL_BENCH_FULL-style): the 10⁵-candidate gain-oracle row, where a
+# dense host C_a cannot exist and the host oracle streams row blocks.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -32,3 +41,7 @@ fi
 python -m pytest -x -q ${MARKER[@]+"${MARKER[@]}"} "$@"
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q -m "not slow" -k "not _subprocess" "$@"
+if [[ "${CI_FULL:-0}" == "1" ]]; then
+    PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" PLACEMENT_BENCH_FULL=1 \
+        python benchmarks/placement_bench.py
+fi

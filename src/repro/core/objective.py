@@ -29,6 +29,11 @@ from repro.core.topology import CacheNetwork
 
 INF = np.float32(np.inf)
 
+# past this catalog size the dense (O, O) C_a matrix is never built:
+# the host oracle streams row/column blocks and the device twin streams
+# distance tiles (kernels/knn/gains.py)
+CA_MATERIALIZE_MAX = 16384
+
 
 @dataclasses.dataclass(frozen=True)
 class Instance:
@@ -80,19 +85,17 @@ class Instance:
 
         Returns (best1, arg1, best2): arg1 is the slot index, or −1 when
         the repository is the best server. best2 likewise includes the
-        repository as a candidate.
+        repository as a candidate. Ties break to the *lowest slot index*
+        (argmin semantics) — the contract shared bit-for-bit with the
+        device twin (``DeviceInstance.best_two``), so host and device
+        LOCALSWAP attribute corrections to the same slot.
         """
         c = self.slot_costs(slots)                                   # (I,O,K)
-        if c.shape[2] > 1:
-            part = np.argpartition(c, 1, axis=2)[:, :, :2]           # O(K)
-            vals = np.take_along_axis(c, part, axis=2)
-            first = np.argmin(vals, axis=2, keepdims=True)
-            b1 = np.take_along_axis(vals, first, axis=2)[:, :, 0]
-            b2 = np.take_along_axis(vals, 1 - first, axis=2)[:, :, 0]
-            a1 = np.take_along_axis(part, first, axis=2)[:, :, 0]
-        else:
-            b1, a1 = c[:, :, 0], np.zeros(c.shape[:2], dtype=np.int64)
-            b2 = np.full_like(b1, INF)
+        a1 = np.argmin(c, axis=2)                                    # lowest s
+        b1 = np.take_along_axis(c, a1[:, :, None], axis=2)[:, :, 0]
+        masked = c.copy()
+        np.put_along_axis(masked, a1[:, :, None], INF, axis=2)
+        b2 = masked.min(axis=2)
         repo = self.net.h_repo[:, None].astype(np.float32)
         # fold the repository in as the always-available approximizer S
         best1 = np.minimum(b1, repo)
@@ -118,39 +121,295 @@ class Instance:
         return self.empty_cost() - self.total_cost(slots)
 
     # ------------------------------------------------------------- greedy
+    def _ca_col(self, obj: int) -> np.ndarray:
+        """(O,) column C_a[:, obj] — cached-matrix view or on-the-fly."""
+        if self.ca_matrix is not None or "ca" in self.__dict__ \
+                or self.cat.n <= CA_MATERIALIZE_MAX:
+            return self.ca[:, obj]
+        return self.cat.ca(cols=np.array([obj]))[:, 0]
+
     def add_gain_single(self, cur: np.ndarray, obj: int, cache: int) -> float:
         """Marginal gain of adding approximizer (obj, cache) given current
         per-request costs ``cur`` (I, O):  Σ_r λ_r·relu(cur_r − C(r, α))."""
-        newc = self.ca[:, obj][None, :] + self.net.H[:, cache][:, None]
+        newc = self._ca_col(obj)[None, :] + self.net.H[:, cache][:, None]
         return float(np.sum(self.lam * np.maximum(cur - newc, 0.0)))
+
+    def _ca_rows(self, rows: np.ndarray | slice) -> np.ndarray:
+        """(len(rows), O) block of C_a — a view of the cached matrix when
+        it exists (or is small enough to build), computed on the fly
+        otherwise. ``CA_MATERIALIZE_MAX`` keeps the honest-oracle path
+        usable at catalog sizes where a dense (O, O) C_a cannot exist."""
+        if self.ca_matrix is not None or "ca" in self.__dict__ \
+                or self.cat.n <= CA_MATERIALIZE_MAX:
+            return self.ca[rows]
+        idx = np.arange(self.cat.n)[rows] if isinstance(rows, slice) else rows
+        return self.cat.ca(rows=idx)
 
     def add_gain_all(self, cur: np.ndarray, block: int = 2048) -> np.ndarray:
         """(O, J) marginal gain for every candidate approximizer.
 
         gain[o', j] = Σ_{i,o} λ[i,o]·relu(cur[i,o] − H[i,j] − C_a[o, o']),
-        computed in O-row blocks to bound the (O×O) temporary. This is the
-        reference implementation of the fused Pallas ``gain`` kernel
-        (kernels/gain/ref.py re-exports it in pure jnp).
+        computed in O-row blocks to bound the (O×O) temporary; each C_a
+        row block is fetched once and reused across every (ingress,
+        cache) pair (on-the-fly for catalogs past ``CA_MATERIALIZE_MAX``,
+        where the dense matrix cannot be cached). This is the host
+        differential oracle of the device gain kernel
+        (kernels/knn/gains.py; kernels/gain/ref.py is the single-ingress
+        jnp flavor).
         """
         O, J = self.cat.n, self.net.n_caches
         gain = np.zeros((O, J), dtype=np.float64)
-        for i in range(self.net.n_ingress):
-            lam_i = self.lam[i]
-            for j in range(J):
-                h = self.net.H[i, j]
-                if not np.isfinite(h):
-                    continue
-                a = cur[i] - h                                    # (O,)
-                for s in range(0, O, block):
-                    blk = slice(s, s + block)
-                    m = np.maximum(a[blk, None] - self.ca[blk, :], 0.0)
-                    gain[:, j] += lam_i[blk] @ m
+        for s in range(0, O, block):
+            blk = slice(s, s + block)
+            ca_blk = self._ca_rows(blk)
+            for i in range(self.net.n_ingress):
+                for j in range(J):
+                    h = self.net.H[i, j]
+                    if not np.isfinite(h):
+                        continue
+                    a = cur[i, blk] - h                           # (b,)
+                    m = np.maximum(a[:, None] - ca_blk, 0.0)
+                    gain[:, j] += self.lam[i, blk] @ m
         return gain
+
+    def add_gain_delta(self, cur_old: np.ndarray, cur_new: np.ndarray,
+                       block: int = 2048) -> np.ndarray:
+        """(O, J) change in :meth:`add_gain_all` when per-request costs
+        drop from ``cur_old`` to ``cur_new`` (elementwise ≤).
+
+        Only requests whose cost actually changed contribute, so one
+        GREEDY pick (which improves the few requests near the new
+        approximizer) updates the whole gain table in O(changed·O·J)
+        instead of the eager path's full O(O²·J) recompute — the
+        vectorized row-update reuse of ``updated_costs`` applied to the
+        gain table itself.
+        """
+        O, J = self.cat.n, self.net.n_caches
+        delta = np.zeros((O, J), dtype=np.float64)
+        changed = cur_new < cur_old                               # (I, O)
+        for i in range(self.net.n_ingress):
+            idx = np.nonzero(changed[i])[0]
+            if idx.size == 0:
+                continue
+            for s in range(0, idx.size, block):
+                sel = idx[s:s + block]
+                ca_blk = self._ca_rows(sel)
+                a_new = cur_new[i, sel][:, None]
+                a_old = cur_old[i, sel][:, None]
+                lam_i = self.lam[i, sel]
+                for j in range(J):
+                    h = self.net.H[i, j]
+                    if not np.isfinite(h):
+                        continue
+                    m = (np.maximum(a_new - h - ca_blk, 0.0)
+                         - np.maximum(a_old - h - ca_blk, 0.0))
+                    delta[:, j] += lam_i @ m
+        return delta
 
     def updated_costs(self, cur: np.ndarray, obj: int, cache: int) -> np.ndarray:
         """cur after adding (obj, cache): min(cur, C_a[:,obj] + H[:,cache])."""
-        newc = self.ca[:, obj][None, :] + self.net.H[:, cache][:, None]
+        newc = self._ca_col(obj)[None, :] + self.net.H[:, cache][:, None]
         return np.minimum(cur, newc)
+
+
+# ===================================================================== device
+# Device-resident twin of Instance: the placement control plane's state
+# (per-request serving costs, slot layout, C_a access) lives on the
+# accelerator and every oracle/update below is a jitted op, so
+# GREEDY/LOCALSWAP (core/placement/device.py) never round-trips the
+# O(O·J) gain grid through host NumPy. Two C_a modes:
+#
+#   * materialized — the host (O, O) matrix uploaded once (bit-identical
+#     C_a entries to the host oracle; the small-instance fidelity mode);
+#   * streaming    — distance tiles computed on the fly by the
+#     kernels/knn/gains.py oracle (the only mode possible past
+#     CA_MATERIALIZE_MAX, and the one that shards over a mesh).
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "gamma"))
+def _ca_cols_device(coords, objs, metric: str, gamma: float):
+    from repro.core import costs
+    return costs.approx_cost(coords, coords[objs], metric, gamma)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "gamma", "has_ca"))
+def _gain_at_device(coords, ca, lam, cur, H, objs, caches,
+                    metric: str, gamma: float, has_ca: bool):
+    """(k,) exact marginal gains of candidate pairs (objs[c], caches[c])
+    given current costs ``cur`` (I, O) — the batched lazy-greedy refresh."""
+    if has_ca:
+        cac = ca[:, objs]                                      # (O, k)
+    else:
+        from repro.core import costs
+        cac = costs.approx_cost(coords, coords[objs], metric, gamma)
+    hsel = H[:, caches]                                        # (I, k)
+    slack = cur[:, :, None] - cac[None, :, :] - hsel[:, None, :]
+    return jnp.sum(lam[:, :, None] * jnp.maximum(slack, 0.0), axis=(0, 1))
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "gamma", "has_ca"))
+def _apply_pick_device(coords, ca, H, cur, obj, cache,
+                       metric: str, gamma: float, has_ca: bool):
+    """cur ← min(cur, C_a[:, obj] + H[:, cache]) — incremental update."""
+    if has_ca:
+        col = ca[:, obj]
+    else:
+        from repro.core import costs
+        col = costs.approx_cost(coords, coords[obj][None, :],
+                                metric, gamma)[:, 0]
+    newc = col[None, :] + H[:, cache][:, None]
+    return jnp.minimum(cur, newc)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "gamma", "has_ca"))
+def _best_two_device(coords, ca, slots, slot_cache, H, h_repo,
+                     metric: str, gamma: float, has_ca: bool):
+    """Device mirror of Instance.best_two — identical lowest-slot-index
+    tie-break (jnp.argmin keeps the first minimum, like np.argmin)."""
+    safe = jnp.maximum(slots, 0)
+    if has_ca:
+        d = ca[:, safe]                                        # (O, K)
+    else:
+        from repro.core import costs
+        d = costs.approx_cost(coords, coords[safe], metric, gamma)
+    ca_cols = jnp.where(slots[None, :] >= 0, d, jnp.inf)
+    c = ca_cols[None, :, :] + H[:, slot_cache][:, None, :]     # (I, O, K)
+    a1 = jnp.argmin(c, axis=2)
+    b1 = jnp.take_along_axis(c, a1[:, :, None], axis=2)[:, :, 0]
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, c.shape, 2)
+    b2 = jnp.min(jnp.where(k_iota == a1[:, :, None], jnp.inf, c), axis=2)
+    repo = h_repo[:, None]
+    best1 = jnp.minimum(b1, repo)
+    arg1 = jnp.where(repo < b1, -1, a1).astype(jnp.int32)
+    best2 = jnp.minimum(jnp.where(repo < b1, b1, b2), repo)
+    return best1, arg1, best2
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DeviceInstance:
+    """Device-resident twin of :class:`Instance`.
+
+    Holds the arrays every control-plane op needs (f32 coords, rates,
+    retrieval costs, slot layout) plus an optional materialized C_a, and
+    exposes the jitted primitives GREEDY/LOCALSWAP are built from:
+    :meth:`gains` (full batched oracle, mesh-sharded when configured),
+    :meth:`gain_at` (exact refresh of a candidate batch),
+    :meth:`apply_pick` (incremental cost update) and :meth:`best_two`.
+    ``host`` keeps the originating NumPy instance for demand sampling
+    and differential testing — it is never touched by the jitted ops.
+    """
+    host: Instance
+    coords: jax.Array                  # (O, D) f32
+    lam: jax.Array                     # (I, O) f32
+    H: jax.Array                       # (I, J) f32, +inf off-path
+    h_repo: jax.Array                  # (I,) f32
+    slot_cache: jax.Array              # (K,) i32
+    ca: jax.Array | None               # (O, O) materialized C_a, or None
+    metric: str
+    gamma: float
+    mesh: object = None
+    axes: tuple = ()
+    use_pallas: bool | None = None
+    interpret: bool | None = None
+
+    @classmethod
+    def from_instance(cls, inst: Instance, mesh=None, axes: tuple = (),
+                      materialize_ca: bool | None = None,
+                      use_pallas: bool | None = None,
+                      interpret: bool | None = None) -> "DeviceInstance":
+        if materialize_ca is None:
+            materialize_ca = (inst.ca_matrix is not None
+                              or inst.cat.n <= 4096)
+        if inst.ca_matrix is not None and not materialize_ca:
+            raise ValueError("explicit ca_matrix instances must materialize")
+        return cls(
+            host=inst,
+            coords=jnp.asarray(inst.cat.coords, jnp.float32),
+            lam=jnp.asarray(inst.lam, jnp.float32),
+            H=jnp.asarray(inst.net.H, jnp.float32),
+            h_repo=jnp.asarray(inst.net.h_repo, jnp.float32),
+            slot_cache=jnp.asarray(inst.slot_cache, jnp.int32),
+            ca=jnp.asarray(inst.ca, jnp.float32) if materialize_ca else None,
+            metric=inst.cat.metric, gamma=inst.cat.gamma,
+            mesh=mesh, axes=tuple(axes),
+            use_pallas=use_pallas, interpret=interpret)
+
+    # ----------------------------------------------------------- shapes
+    @property
+    def n_objects(self) -> int:
+        return self.coords.shape[0]
+
+    @property
+    def n_caches(self) -> int:
+        return self.H.shape[1]
+
+    @property
+    def n_shards(self) -> int:
+        if self.mesh is None or not self.axes:
+            return 1
+        from repro.kernels.knn import mesh_axes_size
+        return mesh_axes_size(self.mesh, self.axes)
+
+    # ------------------------------------------------------------- ops
+    def initial_costs(self) -> jax.Array:
+        """C(r, ∅) = h_repo, per (ingress, object) — f32 (I, O)."""
+        return jnp.broadcast_to(
+            self.h_repo[:, None], (self.lam.shape[0], self.n_objects)
+        ).astype(jnp.float32)
+
+    def gains(self, cur: jax.Array) -> jax.Array:
+        """(O, J) marginal gains of every candidate — one oracle launch
+        (one per candidate shard when a mesh is configured)."""
+        from repro.kernels.knn import (placement_gains,
+                                       placement_gains_matrix,
+                                       sharded_placement_gains)
+        if self.ca is not None:
+            return placement_gains_matrix(self.ca, self.lam, cur, self.H)
+        if self.mesh is not None and self.n_shards > 1:
+            return sharded_placement_gains(
+                self.coords, self.coords, self.lam, cur, self.H,
+                self.mesh, self.axes, metric=self.metric, gamma=self.gamma,
+                use_pallas=self.use_pallas, interpret=self.interpret)
+        return placement_gains(self.coords, self.coords, self.lam, cur,
+                               self.H, metric=self.metric, gamma=self.gamma,
+                               use_pallas=self.use_pallas,
+                               interpret=self.interpret)
+
+    def gain_at(self, cur: jax.Array, objs: jax.Array, caches: jax.Array
+                ) -> jax.Array:
+        ca = self.ca if self.ca is not None else jnp.zeros((0, 0), jnp.float32)
+        return _gain_at_device(self.coords, ca, self.lam, cur, self.H,
+                               objs, caches, self.metric, self.gamma,
+                               self.ca is not None)
+
+    def apply_pick(self, cur: jax.Array, obj, cache) -> jax.Array:
+        ca = self.ca if self.ca is not None else jnp.zeros((0, 0), jnp.float32)
+        return _apply_pick_device(self.coords, ca, self.H, cur,
+                                  jnp.asarray(obj), jnp.asarray(cache),
+                                  self.metric, self.gamma,
+                                  self.ca is not None)
+
+    def best_two(self, slots: jax.Array):
+        ca = self.ca if self.ca is not None else jnp.zeros((0, 0), jnp.float32)
+        return _best_two_device(self.coords, ca, jnp.asarray(slots),
+                                self.slot_cache, self.H, self.h_repo,
+                                self.metric, self.gamma, self.ca is not None)
+
+    def ca_col(self, obj) -> jax.Array:
+        """(O,) column C_a[:, obj] as a device array."""
+        if self.ca is not None:
+            return self.ca[:, obj]
+        return _ca_cols_device(self.coords, jnp.asarray(obj)[None],
+                               self.metric, self.gamma)[:, 0]
+
+    def total_cost(self, slots) -> float:
+        """C(A) evaluated on device (f32) — the only total-cost path that
+        exists for catalogs past CA_MATERIALIZE_MAX."""
+        best1, _, _ = self.best_two(jnp.asarray(slots))
+        return float(jnp.sum(self.lam * best1))
 
 
 def random_slots(inst: Instance, rng: np.random.Generator) -> np.ndarray:

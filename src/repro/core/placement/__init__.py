@@ -1,10 +1,41 @@
+"""Placement algorithms — the *control plane* of the similarity-cache
+network (paper §3).
+
+The repo splits eq. (4)'s machinery in two:
+
+* **data plane** (kernels/knn, core/simcache) — serving-path lookups:
+  fused segmented-1-NN Pallas kernels, mesh-sharded, LSH-pruned.
+* **control plane** (this package) — solving the offline placement
+  problem that decides *what* those kernels serve. Two implementations
+  of each algorithm:
+
+  - host NumPy (``greedy``, ``localswap``, ``localswap_polish``,
+    ``greedy_then_localswap``) — the readable differential oracles;
+  - device-resident (``device_greedy``, ``device_localswap``,
+    ``device_localswap_polish``, ``device_greedy_then_localswap`` in
+    placement/device.py) — the same algorithms over a
+    ``core.objective.DeviceInstance`` and the batched gain oracle of
+    kernels/knn/gains.py (mesh-sharded over the candidate axis at
+    scale), returning **bit-identical allocations** (lowest-(o', j) /
+    lowest-slot tie-breaks shared by construction). This is the path
+    ``serve.engine.refresh_placement`` takes by default.
+
+``netduel`` (§5) is the online λ-unaware policy; ``continuous`` the
+§4 continuous-relaxation analysis.
+"""
 from repro.core.placement.greedy import greedy
 from repro.core.placement.localswap import localswap, localswap_polish
 from repro.core.placement.netduel import netduel
 from repro.core.placement.cascade import greedy_then_localswap
+from repro.core.placement.device import (device_greedy,
+                                         device_greedy_then_localswap,
+                                         device_localswap,
+                                         device_localswap_polish)
 from repro.core.placement import continuous
 
 __all__ = [
     "greedy", "localswap", "localswap_polish", "netduel",
-    "greedy_then_localswap", "continuous",
+    "greedy_then_localswap", "continuous", "device_greedy",
+    "device_localswap", "device_localswap_polish",
+    "device_greedy_then_localswap",
 ]

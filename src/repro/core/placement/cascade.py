@@ -11,14 +11,14 @@ import numpy as np
 
 from repro.core.objective import Instance
 from repro.core.placement.greedy import greedy
-from repro.core.placement.localswap import SwapState, localswap_polish
+from repro.core.placement.localswap import _EPS, SwapState, localswap_polish
 
 
 def greedy_then_localswap(inst: Instance, max_passes: int = 50,
-                          lazy: bool = True) -> SwapState:
+                          lazy: bool = True, tol: float = _EPS) -> SwapState:
     slots = greedy(inst, lazy=lazy)
     # fill any slots greedy left empty (zero marginal gain) before polishing
     if np.any(slots < 0):
         slots = slots.copy()
         slots[slots < 0] = 0
-    return localswap_polish(inst, slots, max_passes=max_passes)
+    return localswap_polish(inst, slots, max_passes=max_passes, tol=tol)

@@ -1,0 +1,262 @@
+"""Device-resident GREEDY / LOCALSWAP (paper §3.2–3.3) on the batched
+gain oracle.
+
+The NumPy implementations in greedy.py / localswap.py stay as the
+differential oracles; the functions here implement the *same decision
+rules* — identical lowest-(o', j) / lowest-slot tie-breaks, identical
+accept thresholds — while keeping every O(O·J)-sized object (the gain
+table, the per-request cost matrix, the swap deltas) on the
+accelerator as jitted ops over a
+:class:`repro.core.objective.DeviceInstance`. Allocations are
+bit-identical to the host oracles whenever decision margins exceed f32
+resolution (what tests/test_device_placement.py asserts on its
+well-separated instances); on degenerate near-tie instances the f32
+device sums and f64 host sums can straddle a threshold and diverge —
+see the tolerance note below and the observed-demand caveat in
+serve/engine.py.
+
+* :func:`device_greedy` — batched lazy greedy. One full oracle launch
+  (``DeviceInstance.gains``; mesh-sharded over the candidate axis when
+  configured) seeds an upper-bound table; each step re-evaluates the
+  stale top-k candidates in one batched ``gain_at`` call until the
+  argmax entry is fresh (submodularity makes stale entries valid upper
+  bounds, so this accepts exactly the textbook-greedy candidate —
+  including its lowest-flat-index tie-break, since ``jnp.argmax``
+  returns the first maximum and a stale tie at a lower index is always
+  refreshed before acceptance).
+* :func:`device_localswap` / :func:`device_localswap_polish` — the
+  ΔC(y) sweep of localswap.py's best/second-best decomposition as one
+  jitted launch per emulated request: the S_j term is the negated gain
+  oracle restricted to the requested object, the corrections a masked
+  segment-sum over each request's best slot.
+* :func:`device_greedy_then_localswap` — the Remark-1 cascade.
+
+Decision tolerances: ``GAIN_TOL`` mirrors the host greedy default
+(1e-12) so both paths stop on the same nominal threshold — note that
+*both* paths see residual rounding gains near zero (the host's f64
+sums of f32-rounded costs carry ~1e-8-relative noise, the device's f32
+sums ~1e-7), so the stopping boundary is only comparable where real
+gains dominate. ``SWAP_TOL`` (LOCALSWAP accept margin) is raised above
+the f32 noise floor of normalized-λ instances because a swap decision
+compares a full rate-weighted sum against −tol. Differential tests
+pass one explicit tol to both paths and use instances whose decision
+margins exceed these floors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.objective import (DeviceInstance, _gain_at_device,
+                                  random_slots)
+
+GAIN_TOL = 1e-12        # matches the host greedy default
+SWAP_TOL = 1e-6         # f32-safe LOCALSWAP acceptance threshold
+DEFAULT_TOPK = 64
+
+
+# ------------------------------------------------------------------ greedy
+@jax.jit
+def _select_candidate(ub, fresh, col_open):
+    """(argmax index, its masked value, its freshness) over open columns.
+    ``jnp.argmax`` keeps the first maximum → lowest flat (o', j) index."""
+    mask = col_open[jnp.arange(ub.shape[0]) % col_open.shape[0]]
+    masked = jnp.where(mask, ub, -jnp.inf)
+    idx = jnp.argmax(masked)
+    return idx, masked[idx], fresh[idx]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "gamma",
+                                             "has_ca"))
+def _refresh_topk(coords, ca, lam, cur, H, ub, fresh, col_open, k,
+                  metric: str, gamma: float, has_ca: bool):
+    """Re-evaluate the k highest stale upper bounds in one batched
+    oracle call; entries of closed columns are never refreshed."""
+    J = col_open.shape[0]
+    stale = col_open[jnp.arange(ub.shape[0]) % J] & ~fresh
+    vals, idxs = jax.lax.top_k(jnp.where(stale, ub, -jnp.inf), k)
+    g = _gain_at_device(coords, ca, lam, cur, H, idxs // J, idxs % J,
+                        metric, gamma, has_ca)
+    valid = vals > -jnp.inf
+    ub = ub.at[idxs].set(jnp.where(valid, g, ub[idxs]))
+    fresh = fresh.at[idxs].set(valid | fresh[idxs])
+    return ub, fresh
+
+
+def device_greedy(dinst: DeviceInstance, topk: int = DEFAULT_TOPK,
+                  gain_tol: float = GAIN_TOL,
+                  verbose: bool = False) -> np.ndarray:
+    """Batched lazy GREEDY on the device gain oracle; returns the same
+    allocation vector as ``greedy(inst)`` (slots left at −1 when no
+    candidate has gain above ``gain_tol``)."""
+    O, J = dinst.n_objects, dinst.n_caches
+    K = int(dinst.host.net.total_slots)
+    slot_cache = dinst.host.slot_cache
+    free = {j: list(np.where(slot_cache == j)[0][::-1]) for j in range(J)}
+    slots = np.full(K, -1, dtype=np.int64)
+
+    cur = dinst.initial_costs()
+    ub = dinst.gains(cur).astype(jnp.float32).ravel()      # exact → fresh
+    fresh = jnp.ones((O * J,), bool)
+    col_open = jnp.asarray([bool(free[j]) for j in range(J)])
+    ca = dinst.ca if dinst.ca is not None else jnp.zeros((0, 0), jnp.float32)
+    k = min(topk, O * J)
+
+    for picked in range(K):
+        while True:
+            idx, val, is_fresh = _select_candidate(ub, fresh, col_open)
+            if float(val) <= gain_tol:
+                return slots                               # no gain left
+            if bool(is_fresh):
+                break
+            ub, fresh = _refresh_topk(
+                dinst.coords, ca, dinst.lam, cur, dinst.H, ub, fresh,
+                col_open, k, dinst.metric, dinst.gamma, dinst.ca is not None)
+        o, j = divmod(int(idx), J)
+        s = free[j].pop()
+        slots[s] = o
+        cur = dinst.apply_pick(cur, o, j)
+        fresh = jnp.zeros((O * J,), bool)                  # all stale
+        if not free[j]:
+            col_open = col_open.at[j].set(False)
+        if verbose and (picked + 1) % 50 == 0:
+            print(f"[device_greedy] {picked + 1}/{K} cost="
+                  f"{float(jnp.sum(dinst.lam * cur)):.4f}")
+    return slots
+
+
+# --------------------------------------------------------------- localswap
+@functools.partial(jax.jit, static_argnames=("metric", "gamma", "has_ca"))
+def _swap_argmin_device(coords, ca, lam, H, slot_cache, best1, arg1, best2,
+                        obj, ingress, metric: str, gamma: float,
+                        has_ca: bool):
+    """(argmin slot y, ΔC(y)) of replacing slot y with ``obj`` for a
+    request at ``ingress`` — the device mirror of
+    localswap.swap_deltas + np.argmin (lowest-slot tie-break)."""
+    if has_ca:
+        col = ca[:, obj]
+    else:
+        from repro.core import costs
+        col = costs.approx_cost(coords, coords[obj][None, :],
+                                metric, gamma)[:, 0]
+    a = col[None, :, None] + H[:, None, :]                 # (I, O, J)
+    min_ca = jnp.minimum(best1[:, :, None], a)
+    S = jnp.sum(lam[:, :, None] * (min_ca - best1[:, :, None]), axis=(0, 1))
+    K = slot_cache.shape[0]
+    mask = arg1 >= 0
+    yy = jnp.where(mask, arg1, 0)
+    j_of_y = slot_cache[yy]                                # (I, O)
+    a_sel = jnp.take_along_axis(a, j_of_y[:, :, None], axis=2)[:, :, 0]
+    m_sel = jnp.take_along_axis(min_ca, j_of_y[:, :, None], axis=2)[:, :, 0]
+    corr = jnp.where(mask, (jnp.minimum(best2, a_sel) - m_sel) * lam, 0.0)
+    delta = jnp.zeros((K,), jnp.float32).at[yy.ravel()].add(corr.ravel())
+    delta = delta + S[slot_cache]
+    on_path = jnp.isfinite(H[ingress])[slot_cache]
+    delta = jnp.where(on_path, delta, jnp.inf)
+    y = jnp.argmin(delta)
+    return y, delta[y]
+
+
+@dataclasses.dataclass
+class DeviceSwapState:
+    """Device-resident twin of localswap.SwapState."""
+    slots: jax.Array                   # (K,) i32 object ids (no empties)
+    best1: jax.Array                   # (I, O)
+    arg1: jax.Array                    # (I, O) best slot or −1
+    best2: jax.Array                   # (I, O)
+    cost_trace: list = dataclasses.field(default_factory=list)
+    n_swaps: int = 0
+
+    @classmethod
+    def init(cls, dinst: DeviceInstance, slots) -> "DeviceSwapState":
+        slots = jnp.asarray(slots, jnp.int32)
+        b1, a1, b2 = dinst.best_two(slots)
+        return cls(slots=slots, best1=b1, arg1=a1, best2=b2)
+
+    def refresh(self, dinst: DeviceInstance) -> None:
+        self.best1, self.arg1, self.best2 = dinst.best_two(self.slots)
+
+    def cost(self, dinst: DeviceInstance) -> float:
+        return float(jnp.sum(dinst.lam * self.best1))
+
+    @property
+    def slots_np(self) -> np.ndarray:
+        return np.asarray(self.slots).astype(np.int64)
+
+
+def device_localswap_step(dinst: DeviceInstance, st: DeviceSwapState,
+                          obj: int, ingress: int,
+                          tol: float = SWAP_TOL) -> bool:
+    """One LOCALSWAP iteration on device; returns True iff a swap
+    occurred (same accept rule ΔC < −tol and lowest-slot tie-break as
+    the host step)."""
+    ca = dinst.ca if dinst.ca is not None else jnp.zeros((0, 0), jnp.float32)
+    y, dy = _swap_argmin_device(
+        dinst.coords, ca, dinst.lam, dinst.H, dinst.slot_cache,
+        st.best1, st.arg1, st.best2, jnp.asarray(obj, jnp.int32),
+        jnp.asarray(ingress, jnp.int32), dinst.metric, dinst.gamma,
+        dinst.ca is not None)
+    if float(dy) < -tol:
+        st.slots = st.slots.at[y].set(obj)
+        st.refresh(dinst)
+        st.n_swaps += 1
+        return True
+    return False
+
+
+def device_localswap(dinst: DeviceInstance, n_iters: int = 20000,
+                     seed: int = 0, slots0: np.ndarray | None = None,
+                     requests: tuple[np.ndarray, np.ndarray] | None = None,
+                     record_every: int = 0,
+                     tol: float = SWAP_TOL) -> DeviceSwapState:
+    """Off-line LOCALSWAP on device, driven by the same host-sampled
+    emulated request stream as ``localswap(inst, …)`` (identical rng →
+    identical requests → differential comparability)."""
+    rng = np.random.default_rng(seed)
+    slots = random_slots(dinst.host, rng) if slots0 is None \
+        else np.asarray(slots0).copy()
+    st = DeviceSwapState.init(dinst, slots)
+    if requests is None:
+        objs, ings = dinst.host.dem.sample(n_iters, rng)
+    else:
+        objs, ings = requests
+    for t in range(len(objs)):
+        device_localswap_step(dinst, st, int(objs[t]), int(ings[t]), tol=tol)
+        if record_every and t % record_every == 0:
+            st.cost_trace.append(st.cost(dinst))
+    return st
+
+
+def device_localswap_polish(dinst: DeviceInstance, slots: np.ndarray,
+                            max_passes: int = 50,
+                            tol: float = SWAP_TOL) -> DeviceSwapState:
+    """Deterministic LOCALSWAP sweep (localswap_polish's device twin):
+    round-robin over all requested objects until a full pass makes no
+    swap."""
+    st = DeviceSwapState.init(dinst, slots)
+    lam = dinst.host.lam
+    active = [(int(o), int(i)) for i, o in zip(*np.nonzero(lam > 0))]
+    for _ in range(max_passes):
+        swapped = False
+        for o, i in active:
+            swapped |= device_localswap_step(dinst, st, o, i, tol=tol)
+        if not swapped:
+            break
+    return st
+
+
+def device_greedy_then_localswap(dinst: DeviceInstance,
+                                 max_passes: int = 50,
+                                 topk: int = DEFAULT_TOPK,
+                                 tol: float = SWAP_TOL) -> DeviceSwapState:
+    """GREEDY → LOCALSWAP cascade (Remark 1) entirely on device."""
+    slots = device_greedy(dinst, topk=topk)
+    if np.any(slots < 0):
+        slots = slots.copy()
+        slots[slots < 0] = 0
+    return device_localswap_polish(dinst, slots, max_passes=max_passes,
+                                   tol=tol)

@@ -10,9 +10,18 @@ ratio [Fisher–Nemhauser–Wolsey '78]. Two implementations:
   the "smart implementation" the paper alludes to in §3.2 and reduces the
   practical complexity by orders of magnitude while returning the exact
   greedy solution.
-* ``lazy=False`` — textbook greedy, recomputing all O·J gains per step
-  (the paper's stated bound O_R·N·(O·N·K − K(K−1)/2)); used to validate
-  the lazy variant in tests.
+* ``lazy=False`` — textbook greedy. Instead of recomputing all O·J
+  gains from scratch every step (the paper's stated bound
+  O_R·N·(O·N·K − K(K−1)/2)), the gain table is updated incrementally
+  with ``Instance.add_gain_delta``: a pick only changes the gains
+  through the requests whose serving cost it lowered (the same
+  vectorized row update ``updated_costs`` applies to ``cur``), so each
+  step costs O(changed·O·J). Used to validate the lazy variant — and
+  the device control plane (core/placement/device.py) — in tests.
+
+Both host paths are the *differential oracles* of the device
+implementations; allocations are tie-broken to the lowest flat (o', j)
+index everywhere.
 
 Candidates are (object o', cache j) pairs; a candidate is feasible while
 cache j still has a free slot (matroid/cardinality constraint).
@@ -70,15 +79,21 @@ def greedy(inst: Instance, lazy: bool = True, verbose: bool = False,
                 print(f"[greedy] {picked}/{n_select} cost="
                       f"{float(np.sum(inst.lam * cur)):.4f}")
     else:
+        gains = inst.add_gain_all(cur)                        # once, O(O²·J)
         for picked in range(n_select):
-            gains = inst.add_gain_all(cur)
+            masked = gains.copy()
             for j in range(inst.net.n_caches):                # mask full caches
                 if not free[j]:
-                    gains[:, j] = -np.inf
-            o, j = np.unravel_index(int(np.argmax(gains)), gains.shape)
-            if gains[o, j] <= gain_tol:
+                    masked[:, j] = -np.inf
+            o, j = np.unravel_index(int(np.argmax(masked)), masked.shape)
+            if masked[o, j] <= gain_tol:
                 break                                         # no positive gain left
             s = free[j].pop()
             slots[s] = o
-            cur = inst.updated_costs(cur, o, j)
+            new_cur = inst.updated_costs(cur, o, j)
+            # incremental gain update: only requests whose cost dropped
+            # contribute (satellite of the device refactor; exact up to
+            # float association)
+            gains += inst.add_gain_delta(cur, new_cur)
+            cur = new_cur
     return slots

@@ -103,12 +103,14 @@ def localswap_step(inst: Instance, st: SwapState, obj: int, ingress: int,
 def localswap(inst: Instance, n_iters: int = 20000, seed: int = 0,
               slots0: np.ndarray | None = None,
               requests: tuple[np.ndarray, np.ndarray] | None = None,
-              record_every: int = 0) -> SwapState:
+              record_every: int = 0, tol: float = _EPS) -> SwapState:
     """Off-line LOCALSWAP driven by emulated requests sampled ∝ λ (§3.3).
 
     ``requests`` may supply an explicit (object_idx, ingress_idx) stream
     (the *online* mode — e.g. a real trace); otherwise ``n_iters``
-    emulated requests are drawn from the instance demand.
+    emulated requests are drawn from the instance demand. ``tol`` is the
+    swap acceptance threshold (ΔC < −tol), exposed so differential tests
+    can run host and device paths at one decision margin.
     """
     rng = np.random.default_rng(seed)
     slots = random_slots(inst, rng) if slots0 is None else slots0.copy()
@@ -118,7 +120,7 @@ def localswap(inst: Instance, n_iters: int = 20000, seed: int = 0,
     else:
         objs, ings = requests
     for t in range(len(objs)):
-        localswap_step(inst, st, int(objs[t]), int(ings[t]))
+        localswap_step(inst, st, int(objs[t]), int(ings[t]), tol=tol)
         if record_every and t % record_every == 0:
             st.cost_trace.append(st.cost(inst))
     return st

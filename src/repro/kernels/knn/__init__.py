@@ -1,3 +1,6 @@
+from repro.kernels.knn.gains import (placement_gains,
+                                     placement_gains_matrix,
+                                     sharded_placement_gains)
 from repro.kernels.knn.lsh import (CandidatePolicy, CandidateTables,
                                    KMeansPolicy, SimHashPolicy,
                                    default_policy, stack_shard_tables)
@@ -7,7 +10,8 @@ from repro.kernels.knn.ops import (fused_lookup, mesh_axes_size,
                                    sharded_fused_lookup,
                                    sharded_pruned_fused_lookup)
 from repro.kernels.knn.ref import (fused_lookup_ref, knn_ref,
-                                   pad_to_shards, pruned_fused_lookup_ref,
+                                   pad_to_shards, placement_gains_ref,
+                                   pruned_fused_lookup_ref,
                                    reduce_shard_minima,
                                    sharded_fused_lookup_ref,
                                    sharded_pruned_fused_lookup_ref)
@@ -19,4 +23,6 @@ __all__ = ["nearest_approximizer", "pad_for_knn", "knn_ref",
            "CandidateTables", "SimHashPolicy", "KMeansPolicy",
            "default_policy", "stack_shard_tables", "pruned_fused_lookup",
            "pruned_fused_lookup_ref", "sharded_pruned_fused_lookup",
-           "sharded_pruned_fused_lookup_ref"]
+           "sharded_pruned_fused_lookup_ref", "placement_gains",
+           "placement_gains_matrix", "sharded_placement_gains",
+           "placement_gains_ref"]

@@ -13,8 +13,11 @@ import jax.numpy as jnp
 _INF = 3.0e38
 
 
-def knn_ref(queries: jnp.ndarray, keys: jnp.ndarray, metric: str = "l2",
-            gamma: float = 1.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+def _dense_ca(queries: jnp.ndarray, keys: jnp.ndarray, metric: str,
+              gamma: float) -> jnp.ndarray:
+    """Dense (Q, K) approximation-cost matrix C_a = d(q, k)^γ, f32 —
+    the one definition of the oracles' distance block (kernels keep
+    their own tiled `_distance_block`)."""
     q = queries.astype(jnp.float32)
     k = keys.astype(jnp.float32)
     if metric == "l1":
@@ -26,9 +29,39 @@ def knn_ref(queries: jnp.ndarray, keys: jnp.ndarray, metric: str = "l2",
         d = d2 if metric == "l2sq" else jnp.sqrt(d2)
     else:
         raise ValueError(metric)
-    cost = d if gamma == 1.0 else jnp.power(jnp.maximum(d, 0.0), gamma)
+    return d if gamma == 1.0 else jnp.power(jnp.maximum(d, 0.0), gamma)
+
+
+def knn_ref(queries: jnp.ndarray, keys: jnp.ndarray, metric: str = "l2",
+            gamma: float = 1.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    cost = _dense_ca(queries, keys, metric, gamma)
     idx = jnp.argmin(cost, axis=1).astype(jnp.int32)
     return jnp.min(cost, axis=1), idx
+
+
+def placement_gains_ref(x: jnp.ndarray, y: jnp.ndarray, lam: jnp.ndarray,
+                        cur: jnp.ndarray, hreq: jnp.ndarray,
+                        metric: str = "l2", gamma: float = 1.0
+                        ) -> jnp.ndarray:
+    """Oracle for the placement gain kernel (kernels.knn.gains).
+
+    x: (R, D) request-object coords; y: (O, D) candidates; lam, cur:
+    (I, R) per-(ingress, object) rates / current serving costs; hreq:
+    (I, J) retrieval costs (+inf ⇒ off-path ⇒ zero gain). Returns the
+    (O, J) marginal gains
+
+        gain[o', j] = Σ_i Σ_r λ[i, r]·relu(cur[i, r] − C_a(x_r, y_{o'})
+                                            − H[i, j])
+
+    materializing the full (I, R, O, J) slack tensor — small instances
+    only; the kernel and its blocked jnp twin stream tiles instead.
+    """
+    ca = _dense_ca(x, y, metric, gamma)
+    slack = (cur[:, :, None, None] - ca[None, :, :, None]
+             - hreq[:, None, None, :])                       # (I, R, O, J)
+    slack = jnp.where(jnp.isnan(slack), -jnp.inf, slack)     # inf − inf
+    return jnp.sum(lam[:, :, None, None].astype(jnp.float32)
+                   * jnp.maximum(slack, 0.0), axis=(0, 1))
 
 
 def fused_lookup_ref(queries: jnp.ndarray, keys: jnp.ndarray,
@@ -46,23 +79,13 @@ def fused_lookup_ref(queries: jnp.ndarray, keys: jnp.ndarray,
     entry: no repository fold, and a segment with no valid key returns
     (+INF, 0, repo_level, 0, −1) — the kernel's untouched init state.
     """
-    q = queries.astype(jnp.float32)
-    k = keys.astype(jnp.float32)
-    if metric == "l1":
-        d = jnp.sum(jnp.abs(q[:, None, :] - k[None, :, :]), axis=-1)
-    elif metric in ("l2", "l2sq"):
-        d2 = (jnp.sum(q * q, -1)[:, None] + jnp.sum(k * k, -1)[None, :]
-              - 2.0 * q @ k.T)
-        d2 = jnp.maximum(d2, 0.0)
-        d = d2 if metric == "l2sq" else jnp.sqrt(d2)
-    else:
-        raise ValueError(metric)
-    ca = d if gamma == 1.0 else jnp.power(jnp.maximum(d, 0.0), gamma)
+    ca = _dense_ca(queries, keys, metric, gamma)
     valid = (meta[3, :] > 0)[None, :]
     cost = jnp.where(valid, ca + h_key[None, :].astype(jnp.float32), _INF)
     best = jnp.argmin(cost, axis=1)
     bcost = jnp.min(cost, axis=1)
-    bca = jnp.where(valid[0, best], ca[jnp.arange(q.shape[0]), best], 0.0)
+    bca = jnp.where(valid[0, best],
+                    ca[jnp.arange(queries.shape[0]), best], 0.0)
     # strict <: when nothing is valid (bcost == _INF) the "winner" is the
     # masked key 0 — overridden by either the repo fold or the shard-local
     # init-state defaults below.

@@ -284,6 +284,13 @@ class LookupShardPolicy:
     chunk, seeded from ``table_seed`` (shard s draws from
     ``policy.for_shard(s)``, so hyperplanes/centroids are independent
     across shards while the whole fleet stays reproducible).
+
+    The *control plane* rides the same axes: the placement gain oracle
+    (kernels/knn/gains.py) shard_maps its candidate-object axis over
+    ``axes`` (see :meth:`gain_shard_args`), so candidate shards are
+    co-resident with the data-plane key shards they would populate —
+    one placement decision's gains and its eventual cache keys live on
+    the same devices.
     """
     mesh: Mesh
     axes: tuple[str, ...]
@@ -316,6 +323,17 @@ class LookupShardPolicy:
             return None
         from repro.kernels.knn.lsh import default_policy
         return default_policy(self.prune, seed=self.table_seed)
+
+    def gain_shard_args(self) -> tuple[Mesh, tuple[str, ...]] | None:
+        """(mesh, axes) for sharding the placement gain oracle's
+        candidate axis — None when the policy resolves to a single
+        shard (the oracle then runs unsharded, and
+        ``sharded_placement_gains`` would only add shard_map overhead).
+        Values are bit-identical either way (the oracle's per-candidate
+        sums are shard-count-independent by construction)."""
+        if self.n_shards <= 1:
+            return None
+        return (self.mesh, self.axes)
 
 
 def replicated(mesh: Mesh) -> NamedSharding:

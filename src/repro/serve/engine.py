@@ -29,8 +29,28 @@ latency trade-off (γ keeps its role).
 Placement control plane: the engine records empirical demand; calling
 ``refresh_placement(algo)`` re-solves the offline problem (GREEDY /
 LOCALSWAP / cascade) on the observed measure — the paper's offline
-algorithms applied on a rolling window. ``netduel=True`` instead adapts
-online per request (λ-unaware, §5).
+algorithms applied on a rolling window. With
+``EngineConfig.device_placement`` (default) the solve runs on the
+*device-resident* control plane (core/placement/device.py): the
+observed instance becomes a ``DeviceInstance``, marginal gains come
+from the batched gain oracle of kernels/knn/gains.py (sharded over the
+same mesh axes as the data-plane keys when ``sharded``), and
+GREEDY/LOCALSWAP loop over jitted incremental updates — so a rolling
+re-placement no longer stalls the host exactly when the catalog grows.
+``device_placement=False`` keeps the NumPy oracles (the control-plane
+twin of ``fused=False``). The two paths are bit-identical on
+well-separated instances (tests/test_device_placement.py); on an
+*observed* window the ``counts + 1e-9`` demand floor leaves the
+never-requested tail with gains below f32 resolution, so tail slots —
+whose placement is statistically irrelevant — may be filled in a
+different order than the f64 host path would pick.
+``netduel=True`` instead adapts online per request (λ-unaware, §5).
+
+Control-plane/data-plane split: the data plane (lookups) and control
+plane (placement solves) share the mesh and the shard axes picked by
+``LookupShardPolicy``, but run disjoint kernels — a placement refresh
+is a burst of gain-oracle launches between serving batches, never on
+the serving path itself.
 
 Straggler mitigation: ``HedgedLookup`` (ft/straggler.py) wraps the
 per-level lookups; a slow level is cut off and served by the next level
@@ -50,8 +70,11 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import demand as demand_api
 from repro.core.catalog import Catalog
-from repro.core.objective import Instance
-from repro.core.placement import greedy, greedy_then_localswap, localswap
+from repro.core.objective import DeviceInstance, Instance
+from repro.core.placement import (device_greedy,
+                                  device_greedy_then_localswap,
+                                  device_localswap, greedy,
+                                  greedy_then_localswap, localswap)
 from repro.core.simcache import SimCacheNetwork
 from repro.core.topology import tpu_hierarchy
 from repro.launch.sharding import LookupShardPolicy
@@ -73,6 +96,9 @@ class EngineConfig:
     sharded: bool = False         # mesh-sharded keys (needs engine mesh)
     prune: str | None = None      # "lsh" | "kmeans" candidate pre-filter
     verify: bool = False          # exact re-scan past the pruning bound
+    device_placement: bool = True  # device-resident placement control plane
+    swap_tol: float = 1e-3        # device LOCALSWAP accept margin (f32-safe
+    #                               at calibrated-ms cost scales)
 
 
 @dataclasses.dataclass
@@ -145,12 +171,35 @@ class SimCacheEngine:
                       gamma=self.ecfg.gamma)
         return Instance(net=self.net, cat=cat, dem=dem)
 
-    def refresh_placement(self, algo: str | None = None) -> float:
+    def refresh_placement(self, algo: str | None = None,
+                          device: bool | None = None) -> float:
         """Re-solve offline placement on the observed demand window;
-        rebuild the runtime cache. Returns the predicted C(A)."""
+        rebuild the runtime cache. Returns the predicted C(A).
+
+        ``device=None`` follows ``EngineConfig.device_placement``: the
+        default device path solves on a DeviceInstance via the batched
+        gain oracle (mesh-sharded alongside the data-plane keys when
+        ``sharded``); ``device=False`` forces the NumPy oracles.
+        """
         algo = algo or self.ecfg.algo
+        if device is None:
+            device = self.ecfg.device_placement
         inst = self.observed_instance()
-        if algo == "greedy":
+        if device:
+            sh = (self.lookup_shards.gain_shard_args()
+                  if (self.ecfg.sharded and self.lookup_shards) else None)
+            dinst = DeviceInstance.from_instance(
+                inst, mesh=sh[0] if sh else None,
+                axes=sh[1] if sh else (), materialize_ca=False)
+            if algo == "greedy":
+                slots = device_greedy(dinst)
+            elif algo == "localswap":
+                slots = device_localswap(dinst, n_iters=4000,
+                                         tol=self.ecfg.swap_tol).slots_np
+            else:
+                slots = device_greedy_then_localswap(
+                    dinst, max_passes=8, tol=self.ecfg.swap_tol).slots_np
+        elif algo == "greedy":
             slots = greedy(inst)
         elif algo == "localswap":
             slots = localswap(inst, n_iters=4000).slots
@@ -167,6 +216,10 @@ class SimCacheEngine:
                         if self.lookup_shards else None),
             candidate_policy=(self.lookup_shards.candidate_policy()
                               if self.lookup_shards else None))
+        if device:
+            # device evaluator — the only C(A) path that exists past
+            # objective.CA_MATERIALIZE_MAX catalogs
+            return dinst.total_cost(slots)
         return inst.total_cost(slots)
 
     # --------------------------------------------------------- data plane
