@@ -126,10 +126,10 @@ def run(n_items: int = 4000, k: int = 100, h: float = 150.0,
 
     # placement-refresh row: the control-plane path serve/engine takes
     # on a rolling window — host lazy GREEDY vs the device-resident
-    # batched lazy GREEDY (streamed-C_a mode, bit-identical allocation).
-    # At this trace's O=4k the host heap is still competitive (the
-    # device loop pays one jit dispatch per pick); placement_bench.py
-    # records the crossover and the ~30× oracle-level gap at 10⁴.
+    # batched lazy GREEDY (streamed-C_a mode; since PR 5 the accept
+    # loop is one lax.while_loop launch, so no per-pick jit dispatch).
+    # placement_bench.py records the scanned/stepped/host columns and
+    # the ~30× oracle-level gap at 10⁴.
     hg, t_hg = timed(lambda: greedy(inst))
     dinst = DeviceInstance.from_instance(inst, materialize_ca=False)
     dg, t_dg = timed(lambda: device_greedy(dinst))

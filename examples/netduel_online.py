@@ -1,10 +1,15 @@
 """NETDUEL (§5) adapting online to a demand shift — the λ-unaware policy
-tracks a moving Gaussian without ever being told the rates — benchmarked
-against the *device-resident* offline control plane: after each phase,
-one ``device_greedy`` solve (the batched gain oracle of
-kernels/knn/gains.py) gives the λ-aware offline reference cost NETDUEL
-is chasing, the same path ``serve.engine.refresh_placement`` takes on a
-rolling window.
+tracks a moving Gaussian without ever being told the rates — now running
+on the *device-resident online control plane*: each phase is one jitted
+``lax.scan`` over the whole request window (``device_netduel``), priced
+by the same gain machinery the offline solvers use, and benchmarked
+against the device-GREEDY offline reference (the batched gain oracle of
+kernels/knn/gains.py) — the same two paths ``serve.engine`` wires
+together with ``EngineConfig.netduel`` / ``refresh_placement``.
+
+Phase 1 also replays the window through the host NumPy policy to show
+the device scan reproduces it bit-for-bit (the contract of
+tests/test_netduel_device.py).
 
   PYTHONPATH=src python examples/netduel_online.py
 """
@@ -12,7 +17,7 @@ import numpy as np
 
 from repro.core import catalog, demand, topology
 from repro.core.objective import DeviceInstance, Instance
-from repro.core.placement import device_greedy, netduel
+from repro.core.placement import device_greedy, device_netduel, netduel
 
 
 def offline_reference(inst: Instance) -> float:
@@ -34,28 +39,41 @@ def main():
     dem2 = demand.Demand(lam=(d2 / d2.sum())[None, :])
     inst1 = Instance(net=net, cat=cat, dem=dem1)
     inst2 = Instance(net=net, cat=cat, dem=dem2)
+    dinst1 = DeviceInstance.from_instance(inst1)
+    dinst2 = DeviceInstance.from_instance(inst2)
 
     rng = np.random.default_rng(0)
     objs1, ing1 = dem1.sample(40000, rng)
     objs2, ing2 = dem2.sample(40000, rng)
 
-    st = netduel(inst1, requests=(objs1, ing1), window=1200, arm_prob=0.3)
-    c1 = st.sw.cost(inst1)
+    st = device_netduel(dinst1, requests=(objs1, ing1), window=1200,
+                        arm_prob=0.3, record_events=True)
+    c1 = inst1.total_cost(st.slots)
     ref1 = offline_reference(inst1)
     print(f"after phase 1: C(A | λ1) = {c1:.4f} "
-          f"({st.n_promotions} promotions; "
+          f"({st.n_promotions} promotions in one scan launch; "
           f"offline device-GREEDY ref {ref1:.4f})")
 
-    st2 = netduel(inst2, requests=(objs2, ing2), window=1200, arm_prob=0.3,
-                  slots0=st.sw.slots)
+    # the host policy replays the same window to the same state, bit
+    # for bit — the scan is a port of the decisions, not of the spirit
+    st_host = netduel(inst1, requests=(objs1, ing1), window=1200,
+                      arm_prob=0.3)
+    assert np.array_equal(st_host.sw.slots, st.slots)
+    assert st_host.promotions == st.promotions
+    print("host NumPy NETDUEL replay: identical promotion sequence "
+          f"({len(st.promotions)} events) and final slots")
+
+    st2 = device_netduel(dinst2, requests=(objs2, ing2), window=1200,
+                        arm_prob=0.3, slots0=st.slots)
     ref2 = offline_reference(inst2)
     print(f"right after shift: C(A_old | λ2) = "
-          f"{inst2.total_cost(st.sw.slots):.4f}")
-    print(f"after adaptation:  C(A_new | λ2) = {st2.sw.cost(inst2):.4f} "
+          f"{inst2.total_cost(st.slots):.4f}")
+    c2 = inst2.total_cost(st2.slots)
+    print(f"after adaptation:  C(A_new | λ2) = {c2:.4f} "
           f"({st2.n_promotions} promotions; "
           f"offline device-GREEDY ref {ref2:.4f})")
-    assert st2.sw.cost(inst2) < inst2.total_cost(st.sw.slots)
-    gap = st2.sw.cost(inst2) / ref2 - 1.0
+    assert c2 < inst2.total_cost(st.slots)
+    gap = c2 / ref2 - 1.0
     print(f"NetDuel recovered from the demand shift without knowing λ; "
           f"the device control plane prices its remaining gap to the "
           f"offline GREEDY reference at {100 * gap:.1f}%.")

@@ -23,14 +23,22 @@
 # device-count independent, so rerunning them 8-way adds nothing —
 # the same rationale as the *_subprocess deselect.
 #
-# The differential placement suite (tests/test_device_placement.py —
-# device GREEDY/LOCALSWAP bit-identical to the NumPy oracles) runs in
-# BOTH passes: its mesh tests build over every visible device, so pass
-# 1 exercises the 1-shard gain oracle and pass 2 the real 8-way
-# candidate sharding. The nightly pass additionally runs the placement
-# control-plane benchmark with its PLACEMENT_BENCH_FULL gate open
-# (KERNEL_BENCH_FULL-style): the 10⁵-candidate gain-oracle row, where a
-# dense host C_a cannot exist and the host oracle streams row blocks.
+# The differential placement suites (tests/test_device_placement.py —
+# device GREEDY/LOCALSWAP bit-identical to the NumPy oracles — and
+# tests/test_netduel_device.py — the scanned device NETDUEL
+# bit-identical to the host §5 policy) run in BOTH passes under
+# -m "not slow": their mesh tests build over every visible device, so
+# pass 1 exercises the 1-shard oracles and pass 2 the real 8-way
+# candidate/request-axis sharding (sharded_placement_gains +
+# sharded_best_two). The trace-replay golden test
+# (tests/test_trace_replay.py, EngineConfig.netduel end-to-end) and the
+# control-plane property tests ride the same passes. The nightly
+# CI_FULL pass additionally (i) opens the env gate of the 10⁵-object
+# NETDUEL window (tests/test_netduel_device.py::
+# test_netduel_large_window_smoke — slow-marked, device-only: no host
+# C_a can exist at that size) and (ii) runs the placement benchmark
+# with PLACEMENT_BENCH_FULL open: the 10⁵-candidate gain-oracle row
+# and the 10⁵ device-only NETDUEL window row.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

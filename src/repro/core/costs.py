@@ -56,6 +56,38 @@ def approx_cost(x: Array, y: Array, metric: str = "l1", gamma: float = 1.0) -> A
     return approx_cost_from_distance(pairwise_distance(x, y, metric), gamma)
 
 
+def pairwise_distance_stable(x: Array, y: Array, metric: str = "l1") -> Array:
+    """Shape-stable pairwise distances: the broadcast (no-matmul) form.
+
+    Each (row, col) pair reduces its D differences independently of the
+    batch shape, so the same pair yields the *same f32 value* whether
+    computed as a single column, a k-candidate batch, a row block, or
+    the full matrix. The MXU form of :func:`pairwise_distance` is much
+    faster, but its |x|²+|y|²−2x·y cancellation depends on the compiled
+    contraction, so the same pair evaluated at different batch shapes
+    can differ by ~|x|²·eps — enough to leave phantom positive gains on
+    candidates already folded into a running cost vector. The
+    incremental control-plane ops (``objective._gain_at_device`` /
+    ``_apply_pick_device`` and friends) therefore use this form; the
+    data-plane kernels and the full tile oracles keep the MXU form.
+    Memory: materializes an (n, m, D) temporary — callers keep one of
+    n, m small.
+    """
+    if metric == "l1":
+        return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+    if metric in ("l2", "l2sq"):
+        d2 = jnp.sum((x[:, None, :] - y[None, :, :]) ** 2, axis=-1)
+        return d2 if metric == "l2sq" else jnp.sqrt(d2)
+    raise ValueError(f"unknown metric {metric!r}; expected one of {METRICS}")
+
+
+def approx_cost_stable(x: Array, y: Array, metric: str = "l1",
+                       gamma: float = 1.0) -> Array:
+    """Shape-stable C_a (see :func:`pairwise_distance_stable`)."""
+    return approx_cost_from_distance(pairwise_distance_stable(x, y, metric),
+                                     gamma)
+
+
 @functools.partial(jax.jit, static_argnames=("metric", "gamma"))
 def _approx_cost_jit(x, y, metric, gamma):
     return approx_cost(x, y, metric, gamma)

@@ -232,7 +232,7 @@ import jax.numpy as jnp
 @functools.partial(jax.jit, static_argnames=("metric", "gamma"))
 def _ca_cols_device(coords, objs, metric: str, gamma: float):
     from repro.core import costs
-    return costs.approx_cost(coords, coords[objs], metric, gamma)
+    return costs.approx_cost_stable(coords, coords[objs], metric, gamma)
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "gamma", "has_ca"))
@@ -244,7 +244,10 @@ def _gain_at_device(coords, ca, lam, cur, H, objs, caches,
         cac = ca[:, objs]                                      # (O, k)
     else:
         from repro.core import costs
-        cac = costs.approx_cost(coords, coords[objs], metric, gamma)
+        # shape-stable form: bitwise-consistent with _apply_pick_device,
+        # so a candidate already folded into ``cur`` refreshes to an
+        # exact-zero gain (no phantom f32 tail gains — see costs.py)
+        cac = costs.approx_cost_stable(coords, coords[objs], metric, gamma)
     hsel = H[:, caches]                                        # (I, k)
     slack = cur[:, :, None] - cac[None, :, :] - hsel[:, None, :]
     return jnp.sum(lam[:, :, None] * jnp.maximum(slack, 0.0), axis=(0, 1))
@@ -258,25 +261,48 @@ def _apply_pick_device(coords, ca, H, cur, obj, cache,
         col = ca[:, obj]
     else:
         from repro.core import costs
-        col = costs.approx_cost(coords, coords[obj][None, :],
-                                metric, gamma)[:, 0]
+        col = costs.approx_cost_stable(coords, coords[obj][None, :],
+                                       metric, gamma)[:, 0]
     newc = col[None, :] + H[:, cache][:, None]
     return jnp.minimum(cur, newc)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "gamma", "has_ca"))
-def _best_two_device(coords, ca, slots, slot_cache, H, h_repo,
-                     metric: str, gamma: float, has_ca: bool):
-    """Device mirror of Instance.best_two — identical lowest-slot-index
-    tie-break (jnp.argmin keeps the first minimum, like np.argmin)."""
+def _stable_ca_cols(x, keys, metric: str, gamma: float,
+                    block: int = 16) -> jax.Array:
+    """(R, K) shape-stable C_a against the slot keys, lax.map-blocked
+    over slot chunks so the (R, block, D) broadcast temporary stays
+    bounded at 10⁵-object catalogs. Per-pair values equal
+    ``costs.approx_cost_stable`` at any batch shape by construction."""
+    from repro.core import costs
+    K, D = keys.shape
+    pad = (-K) % block
+    tiles = jnp.pad(keys, ((0, pad), (0, 0))).reshape(-1, block, D)
+    out = jax.lax.map(
+        lambda kt: costs.approx_cost_stable(x, kt, metric, gamma), tiles)
+    return jnp.moveaxis(out, 0, 1).reshape(x.shape[0], -1)[:, :K]
+
+
+def _best_two_rows(rows, keys, slots, slot_cache, H, h_repo,
+                   metric: str, gamma: float, has_ca: bool):
+    """best1/arg1/best2 for a block of request rows.
+
+    ``rows`` is either a (R, O) block of C_a rows (``has_ca``) or the
+    (R, D) request coordinates, with ``keys`` the (K, D) slot-key
+    coordinates. Rows are independent, which is exactly what lets
+    :func:`sharded_best_two` shard_map this over the request axis with
+    bit-identical per-row results. The coords mode uses the
+    shape-stable distance form (costs.pairwise_distance_stable), so a
+    table entry for pair (r, y) is bitwise the value every other
+    incremental op (swap deltas, duel pricing, apply_pick) computes for
+    that pair — the streamed control plane has one canonical C_a.
+    """
     safe = jnp.maximum(slots, 0)
     if has_ca:
-        d = ca[:, safe]                                        # (O, K)
+        d = rows[:, safe]                                      # (R, K)
     else:
-        from repro.core import costs
-        d = costs.approx_cost(coords, coords[safe], metric, gamma)
+        d = _stable_ca_cols(rows, keys, metric, gamma)
     ca_cols = jnp.where(slots[None, :] >= 0, d, jnp.inf)
-    c = ca_cols[None, :, :] + H[:, slot_cache][:, None, :]     # (I, O, K)
+    c = ca_cols[None, :, :] + H[:, slot_cache][:, None, :]     # (I, R, K)
     a1 = jnp.argmin(c, axis=2)
     b1 = jnp.take_along_axis(c, a1[:, :, None], axis=2)[:, :, 0]
     k_iota = jax.lax.broadcasted_iota(jnp.int32, c.shape, 2)
@@ -286,6 +312,73 @@ def _best_two_device(coords, ca, slots, slot_cache, H, h_repo,
     arg1 = jnp.where(repo < b1, -1, a1).astype(jnp.int32)
     best2 = jnp.minimum(jnp.where(repo < b1, b1, b2), repo)
     return best1, arg1, best2
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "gamma", "has_ca"))
+def _best_two_device(coords, ca, slots, slot_cache, H, h_repo,
+                     metric: str, gamma: float, has_ca: bool):
+    """Device mirror of Instance.best_two — identical lowest-slot-index
+    tie-break (jnp.argmin keeps the first minimum, like np.argmin)."""
+    rows = ca if has_ca else coords
+    keys = jnp.zeros((0, 0), jnp.float32) if has_ca \
+        else coords[jnp.maximum(slots, 0)]
+    return _best_two_rows(rows, keys, slots, slot_cache, H, h_repo,
+                          metric, gamma, has_ca)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "gamma", "has_ca",
+                                             "mesh", "axes"))
+def sharded_best_two(coords, ca, slots, slot_cache, H, h_repo, mesh,
+                     axes: tuple, metric: str, gamma: float, has_ca: bool):
+    """Mesh-sharded best1/arg1/best2: the request axis (the (I, O) cost
+    tables' object dimension) is shard_mapped over ``axes`` — the same
+    axes the data-plane keys shard over — with slot keys and topology
+    replicated. Every request row is computed with the exact ops of
+    :func:`_best_two_device`, so results are bit-identical at any shard
+    count; this is the refresh kernel the online control plane
+    (NETDUEL's promotion re-arm, the scanned LOCALSWAP) runs when a
+    ``DeviceInstance`` carries mesh axes.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.knn.ops import _pad_axis, mesh_axes_size
+    n_shards = mesh_axes_size(mesh, axes)
+    n_obj = coords.shape[0] if not has_ca else ca.shape[0]
+    safe = jnp.maximum(slots, 0)
+    if has_ca:
+        rows = _pad_axis(ca, n_shards, 0, "zero")
+        keys = jnp.zeros((0, 0), jnp.float32)
+    else:
+        rows = _pad_axis(coords, n_shards, 0, "zero")
+        keys = coords[safe]
+
+    def shard_fn(rows_s, keys_s, slots_s, slot_cache_s, H_s, h_repo_s):
+        return _best_two_rows(rows_s, keys_s, slots_s, slot_cache_s, H_s,
+                              h_repo_s, metric, gamma, has_ca)
+
+    best1, arg1, best2 = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(tuple(axes), None), P(), P(), P(), P(), P()),
+        out_specs=(P(None, tuple(axes)),) * 3,
+        check_rep=False)(rows, keys, slots, slot_cache, H, h_repo)
+    return best1[:, :n_obj], arg1[:, :n_obj], best2[:, :n_obj]
+
+
+def best_two_refresh(coords, ca, slots, slot_cache, H, h_repo,
+                     metric: str, gamma: float, has_ca: bool,
+                     mesh=None, axes: tuple = ()):
+    """The single serving-table refresh every control-plane consumer
+    shares (``DeviceInstance.best_two``, the NETDUEL scan's promotion
+    re-arm, the scanned LOCALSWAP's post-swap re-arm): static dispatch
+    to :func:`sharded_best_two` when mesh axes are configured, else the
+    single-device kernel — bit-identical either way. Callers pass
+    ``mesh=None`` when the policy resolves to one shard."""
+    if mesh is not None:
+        return sharded_best_two(coords, ca, slots, slot_cache, H, h_repo,
+                                mesh, axes, metric, gamma, has_ca)
+    return _best_two_device(coords, ca, slots, slot_cache, H, h_repo,
+                            metric, gamma, has_ca)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -393,10 +486,16 @@ class DeviceInstance:
                                   self.ca is not None)
 
     def best_two(self, slots: jax.Array):
+        """best1/arg1/best2 serving tables — request-axis mesh-sharded
+        (``sharded_best_two``) when the instance carries the data-plane
+        shard axes; bit-identical either way."""
         ca = self.ca if self.ca is not None else jnp.zeros((0, 0), jnp.float32)
-        return _best_two_device(self.coords, ca, jnp.asarray(slots),
+        sharded = self.mesh is not None and self.n_shards > 1
+        return best_two_refresh(self.coords, ca, jnp.asarray(slots),
                                 self.slot_cache, self.H, self.h_repo,
-                                self.metric, self.gamma, self.ca is not None)
+                                self.metric, self.gamma, self.ca is not None,
+                                mesh=self.mesh if sharded else None,
+                                axes=self.axes if sharded else ())
 
     def ca_col(self, obj) -> jax.Array:
         """(O,) column C_a[:, obj] as a device array."""

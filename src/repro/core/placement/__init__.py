@@ -25,7 +25,8 @@ The repo splits eq. (4)'s machinery in two:
 """
 from repro.core.placement.greedy import greedy
 from repro.core.placement.localswap import localswap, localswap_polish
-from repro.core.placement.netduel import netduel
+from repro.core.placement.netduel import (DuelPlane, device_netduel,
+                                          netduel)
 from repro.core.placement.cascade import greedy_then_localswap
 from repro.core.placement.device import (device_greedy,
                                          device_greedy_then_localswap,
@@ -35,6 +36,7 @@ from repro.core.placement import continuous
 
 __all__ = [
     "greedy", "localswap", "localswap_polish", "netduel",
+    "device_netduel", "DuelPlane",
     "greedy_then_localswap", "continuous", "device_greedy",
     "device_localswap", "device_localswap_polish",
     "device_greedy_then_localswap",

@@ -23,13 +23,34 @@ serve/engine.py.
   bounds, so this accepts exactly the textbook-greedy candidate —
   including its lowest-flat-index tie-break, since ``jnp.argmax``
   returns the first maximum and a stale tie at a lower index is always
-  refreshed before acceptance).
+  refreshed before acceptance). With ``scan=True`` (default, PR 5) the
+  whole accept loop runs as a single ``lax.while_loop`` launch
+  (``_greedy_scan_loop``) with device-resident free-slot bookkeeping —
+  no per-pick host sync, so the jit-dispatch bound the per-step path
+  hits below ~10³ candidates is gone; ``scan=False`` keeps the
+  per-step path as the differential twin (bit-identical by the scan
+  property test).
 * :func:`device_localswap` / :func:`device_localswap_polish` — the
-  ΔC(y) sweep of localswap.py's best/second-best decomposition as one
-  jitted launch per emulated request: the S_j term is the negated gain
-  oracle restricted to the requested object, the corrections a masked
-  segment-sum over each request's best slot.
+  ΔC(y) sweep of localswap.py's best/second-best decomposition; with
+  ``scan=True`` (default) a whole emulated-request window is one
+  ``lax.scan`` launch (``_localswap_scan``; an accepted swap re-arms
+  the serving tables under ``lax.cond``, request-axis mesh-sharded via
+  ``objective.sharded_best_two`` when the instance carries shard
+  axes), with ``scan=False`` one jitted launch per request: the S_j
+  term is the negated gain oracle restricted to the requested object,
+  the corrections a masked segment-sum over each request's best slot.
 * :func:`device_greedy_then_localswap` — the Remark-1 cascade.
+
+C_a consistency: every *incremental* op here (``gain_at``,
+``apply_pick``, the swap-delta column, the serving tables) computes
+streamed distances with the shape-stable form
+(costs.pairwise_distance_stable), so one (request, candidate) pair has
+one canonical f32 value across all of them — a candidate already
+folded into ``cur`` refreshes to an exact-zero gain and the greedy
+stopping point matches the host even in the zero-demand tail (the MXU
+form's batch-shape-dependent cancellation used to leave phantom
+positive gains there). The full tile oracles (kernels/knn/gains.py)
+keep the MXU form: they only seed upper bounds.
 
 Decision tolerances: ``GAIN_TOL`` mirrors the host greedy default
 (1e-12) so both paths stop on the same nominal threshold — note that
@@ -51,8 +72,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.objective import (DeviceInstance, _gain_at_device,
-                                  random_slots)
+from repro.core.objective import (DeviceInstance, _apply_pick_device,
+                                  _gain_at_device)
 
 GAIN_TOL = 1e-12        # matches the host greedy default
 SWAP_TOL = 1e-6         # f32-safe LOCALSWAP acceptance threshold
@@ -87,12 +108,92 @@ def _refresh_topk(coords, ca, lam, cur, H, ub, fresh, col_open, k,
     return ub, fresh
 
 
+def _slot_fill_tables(dinst: DeviceInstance):
+    """(slots_by_cache (J, max_cap) i32, cap (J,) i32): slot ids of each
+    cache in ascending order — the exact fill order of the host paths'
+    ``free[j].pop()`` (descending list, pop from the end)."""
+    slot_cache = dinst.host.slot_cache
+    caps = dinst.host.net.capacities
+    J = dinst.n_caches
+    tbl = np.zeros((J, max(int(caps.max()), 1)), np.int32)
+    for j in range(J):
+        idx = np.where(slot_cache == j)[0]
+        tbl[j, :idx.size] = idx
+    return jnp.asarray(tbl), jnp.asarray(caps, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots", "k", "metric",
+                                             "gamma", "has_ca"))
+def _greedy_scan_loop(coords, ca, lam, H, cur, ub, fresh, col_open,
+                      slots_by_cache, cap, n_slots: int, gain_tol,
+                      k: int, metric: str, gamma: float, has_ca: bool):
+    """The whole GREEDY accept loop as one ``lax.while_loop`` launch: the
+    select → (refresh-stale | accept) alternation of the per-step path
+    with the free-slot bookkeeping device-resident (``slots_by_cache``
+    ascending-fill tables + per-cache counters), so no scalar syncs to
+    the host until the final allocation. Decision-for-decision identical
+    to the per-step path — same ``_select_candidate``/``_refresh_topk``/
+    ``_apply_pick_device`` ops in the same order, ``gain_tol`` compared
+    in f32 on both (the scan property test of tests/test_properties.py
+    asserts bit-identical allocations at every ``topk``)."""
+    J = col_open.shape[0]
+
+    def cond(s):
+        return ~s[-1]
+
+    def body(s):
+        ub, fresh, col_open, cur, fill, slots, picked, done = s
+        idx, val, is_fresh = _select_candidate(ub, fresh, col_open)
+        stop = val <= gain_tol
+
+        def do_stop(s):
+            ub, fresh, col_open, cur, fill, slots, picked, _ = s
+            return (ub, fresh, col_open, cur, fill, slots, picked,
+                    jnp.bool_(True))
+
+        def do_refresh(s):
+            ub, fresh, col_open, cur, fill, slots, picked, done = s
+            ub, fresh = _refresh_topk(coords, ca, lam, cur, H, ub, fresh,
+                                      col_open, k, metric, gamma, has_ca)
+            return (ub, fresh, col_open, cur, fill, slots, picked, done)
+
+        def do_accept(s):
+            ub, fresh, col_open, cur, fill, slots, picked, done = s
+            o = (idx // J).astype(jnp.int32)
+            j = (idx % J).astype(jnp.int32)
+            slot = slots_by_cache[j, fill[j]]
+            slots = slots.at[slot].set(o)
+            cur = _apply_pick_device(coords, ca, H, cur, o, j,
+                                     metric, gamma, has_ca)
+            fresh = jnp.zeros_like(fresh)
+            fill = fill.at[j].add(1)
+            col_open = col_open.at[j].set(fill[j] < cap[j])
+            picked = picked + 1
+            return (ub, fresh, col_open, cur, fill, slots, picked,
+                    picked >= n_slots)
+
+        return jax.lax.cond(
+            stop, do_stop,
+            lambda s: jax.lax.cond(is_fresh, do_accept, do_refresh, s), s)
+
+    state = (ub, fresh, col_open, cur, jnp.zeros((J,), jnp.int32),
+             jnp.full((n_slots,), -1, jnp.int32), jnp.int32(0),
+             jnp.bool_(False))
+    return jax.lax.while_loop(cond, body, state)[5]
+
+
 def device_greedy(dinst: DeviceInstance, topk: int = DEFAULT_TOPK,
-                  gain_tol: float = GAIN_TOL,
+                  gain_tol: float = GAIN_TOL, scan: bool = True,
                   verbose: bool = False) -> np.ndarray:
     """Batched lazy GREEDY on the device gain oracle; returns the same
     allocation vector as ``greedy(inst)`` (slots left at −1 when no
-    candidate has gain above ``gain_tol``)."""
+    candidate has gain above ``gain_tol``).
+
+    ``scan=True`` (default) runs the whole accept loop as a single
+    ``lax.while_loop`` launch after the one full-oracle launch — no
+    per-pick host sync, which removes the jit-dispatch bound the
+    per-step path (``scan=False``, kept as the differential twin) hits
+    below ~10³ candidates."""
     O, J = dinst.n_objects, dinst.n_caches
     K = int(dinst.host.net.total_slots)
     slot_cache = dinst.host.slot_cache
@@ -106,6 +207,15 @@ def device_greedy(dinst: DeviceInstance, topk: int = DEFAULT_TOPK,
     ca = dinst.ca if dinst.ca is not None else jnp.zeros((0, 0), jnp.float32)
     k = min(topk, O * J)
 
+    if scan:
+        tbl, cap = _slot_fill_tables(dinst)
+        out = _greedy_scan_loop(
+            dinst.coords, ca, dinst.lam, dinst.H, cur, ub, fresh, col_open,
+            tbl, cap, K, jnp.float32(gain_tol), k, dinst.metric,
+            dinst.gamma, dinst.ca is not None)
+        return np.asarray(out).astype(np.int64)
+
+    gain_tol = float(np.float32(gain_tol))   # the scanned path's compare
     for picked in range(K):
         while True:
             idx, val, is_fresh = _select_candidate(ub, fresh, col_open)
@@ -141,8 +251,8 @@ def _swap_argmin_device(coords, ca, lam, H, slot_cache, best1, arg1, best2,
         col = ca[:, obj]
     else:
         from repro.core import costs
-        col = costs.approx_cost(coords, coords[obj][None, :],
-                                metric, gamma)[:, 0]
+        col = costs.approx_cost_stable(coords, coords[obj][None, :],
+                                       metric, gamma)[:, 0]
     a = col[None, :, None] + H[:, None, :]                 # (I, O, J)
     min_ca = jnp.minimum(best1[:, :, None], a)
     S = jnp.sum(lam[:, :, None] * (min_ca - best1[:, :, None]), axis=(0, 1))
@@ -200,7 +310,9 @@ def device_localswap_step(dinst: DeviceInstance, st: DeviceSwapState,
         st.best1, st.arg1, st.best2, jnp.asarray(obj, jnp.int32),
         jnp.asarray(ingress, jnp.int32), dinst.metric, dinst.gamma,
         dinst.ca is not None)
-    if float(dy) < -tol:
+    # f32 accept compare — the same rule the scanned path applies on
+    # device, so per-step and scanned trajectories are bit-identical
+    if float(dy) < -float(np.float32(tol)):
         st.slots = st.slots.at[y].set(obj)
         st.refresh(dinst)
         st.n_swaps += 1
@@ -208,22 +320,83 @@ def device_localswap_step(dinst: DeviceInstance, st: DeviceSwapState,
     return False
 
 
+@functools.partial(jax.jit, static_argnames=("metric", "gamma", "has_ca",
+                                             "mesh", "axes"))
+def _localswap_scan(coords, ca, lam, H, h_repo, slot_cache, carry,
+                    objs, ings, tol, metric: str, gamma: float,
+                    has_ca: bool, mesh, axes):
+    """A whole emulated-request window as one ``lax.scan`` launch: each
+    step is the per-step path's ``_swap_argmin_device`` + f32 accept
+    compare, with an accepted swap re-arming the best1/arg1/best2
+    tables under ``lax.cond`` (request-axis mesh-sharded when the
+    instance carries shard axes). Emits (swapped, C(A)) per step."""
+    from repro.core.objective import best_two_refresh
+
+    def refresh(slots):
+        return best_two_refresh(coords, ca, slots, slot_cache, H, h_repo,
+                                metric, gamma, has_ca, mesh, axes)
+
+    def step(c, x):
+        slots, best1, arg1, best2, n_swaps = c
+        o, i = x
+        y, dy = _swap_argmin_device(coords, ca, lam, H, slot_cache,
+                                    best1, arg1, best2, o, i,
+                                    metric, gamma, has_ca)
+        do = dy < -tol
+        slots = jax.lax.cond(do, lambda s: s.at[y].set(o), lambda s: s,
+                             slots)
+        best1, arg1, best2 = jax.lax.cond(
+            do, refresh, lambda _: (best1, arg1, best2), slots)
+        n_swaps = n_swaps + do.astype(jnp.int32)
+        return (slots, best1, arg1, best2, n_swaps), \
+            (do, jnp.sum(lam * best1))
+
+    return jax.lax.scan(step, carry, (objs, ings))
+
+
+def _run_localswap_scan(dinst: DeviceInstance, st: DeviceSwapState,
+                        objs: np.ndarray, ings: np.ndarray, tol: float):
+    """Advance a DeviceSwapState through one scanned request window;
+    returns the per-step (swapped, cost) traces."""
+    ca = dinst.ca if dinst.ca is not None else jnp.zeros((0, 0), jnp.float32)
+    mesh = dinst.mesh if dinst.n_shards > 1 else None
+    axes = dinst.axes if dinst.n_shards > 1 else ()
+    carry = (jnp.asarray(st.slots, jnp.int32), st.best1, st.arg1, st.best2,
+             jnp.int32(st.n_swaps))
+    carry, (swapped, costs) = _localswap_scan(
+        dinst.coords, ca, dinst.lam, dinst.H, dinst.h_repo,
+        dinst.slot_cache, carry, jnp.asarray(objs, jnp.int32),
+        jnp.asarray(ings, jnp.int32), jnp.float32(tol), dinst.metric,
+        dinst.gamma, dinst.ca is not None, mesh, axes)
+    st.slots, st.best1, st.arg1, st.best2 = carry[:4]
+    st.n_swaps = int(carry[4])
+    return np.asarray(swapped), np.asarray(costs)
+
+
 def device_localswap(dinst: DeviceInstance, n_iters: int = 20000,
                      seed: int = 0, slots0: np.ndarray | None = None,
                      requests: tuple[np.ndarray, np.ndarray] | None = None,
-                     record_every: int = 0,
+                     record_every: int = 0, scan: bool = True,
                      tol: float = SWAP_TOL) -> DeviceSwapState:
     """Off-line LOCALSWAP on device, driven by the same host-sampled
     emulated request stream as ``localswap(inst, …)`` (identical rng →
-    identical requests → differential comparability)."""
-    rng = np.random.default_rng(seed)
-    slots = random_slots(dinst.host, rng) if slots0 is None \
-        else np.asarray(slots0).copy()
+    identical requests → differential comparability).
+
+    ``scan=True`` (default) runs the whole window as one ``lax.scan``
+    launch instead of one jitted step per request — the dispatch-bound
+    regime of the per-step path (``scan=False``, kept as the
+    differential twin) disappears. Same accept rule and tie-breaks, so
+    trajectories are bit-identical between the two paths."""
+    from repro.core.placement.localswap import emulated_stream
+    _, slots, objs, ings = emulated_stream(dinst.host, n_iters, seed,
+                                           slots0, requests)
     st = DeviceSwapState.init(dinst, slots)
-    if requests is None:
-        objs, ings = dinst.host.dem.sample(n_iters, rng)
-    else:
-        objs, ings = requests
+    if scan:
+        _, costs = _run_localswap_scan(dinst, st, objs, ings, tol)
+        if record_every:
+            st.cost_trace = [float(c) for t, c in enumerate(costs)
+                             if t % record_every == 0]
+        return st
     for t in range(len(objs)):
         device_localswap_step(dinst, st, int(objs[t]), int(ings[t]), tol=tol)
         if record_every and t % record_every == 0:
@@ -232,14 +405,24 @@ def device_localswap(dinst: DeviceInstance, n_iters: int = 20000,
 
 
 def device_localswap_polish(dinst: DeviceInstance, slots: np.ndarray,
-                            max_passes: int = 50,
+                            max_passes: int = 50, scan: bool = True,
                             tol: float = SWAP_TOL) -> DeviceSwapState:
     """Deterministic LOCALSWAP sweep (localswap_polish's device twin):
     round-robin over all requested objects until a full pass makes no
-    swap."""
+    swap. ``scan=True`` runs each pass as one scan launch (one host
+    sync per pass — the swap counter — instead of one per request)."""
     st = DeviceSwapState.init(dinst, slots)
     lam = dinst.host.lam
     active = [(int(o), int(i)) for i, o in zip(*np.nonzero(lam > 0))]
+    if scan and active:
+        objs = np.asarray([o for o, _ in active])
+        ings = np.asarray([i for _, i in active])
+        for _ in range(max_passes):
+            before = st.n_swaps
+            _run_localswap_scan(dinst, st, objs, ings, tol)
+            if st.n_swaps == before:
+                break
+        return st
     for _ in range(max_passes):
         swapped = False
         for o, i in active:
@@ -252,11 +435,12 @@ def device_localswap_polish(dinst: DeviceInstance, slots: np.ndarray,
 def device_greedy_then_localswap(dinst: DeviceInstance,
                                  max_passes: int = 50,
                                  topk: int = DEFAULT_TOPK,
+                                 scan: bool = True,
                                  tol: float = SWAP_TOL) -> DeviceSwapState:
     """GREEDY → LOCALSWAP cascade (Remark 1) entirely on device."""
-    slots = device_greedy(dinst, topk=topk)
+    slots = device_greedy(dinst, topk=topk, scan=scan)
     if np.any(slots < 0):
         slots = slots.copy()
         slots[slots < 0] = 0
     return device_localswap_polish(dinst, slots, max_passes=max_passes,
-                                   tol=tol)
+                                   scan=scan, tol=tol)

@@ -33,6 +33,25 @@ from repro.core.objective import Instance, random_slots
 _EPS = 1e-9
 
 
+def emulated_stream(inst: Instance, n_iters: int, seed: int,
+                    slots0: np.ndarray | None = None,
+                    requests: tuple[np.ndarray, np.ndarray] | None = None):
+    """(rng, start slots, objs, ings) — the shared stream setup of every
+    emulated-request policy (LOCALSWAP, NETDUEL, and their device
+    twins). All of them consume the seeded rng in this exact order —
+    start allocation first, then the request sample — which is what
+    makes host and device trajectories comparable under a single seed.
+    """
+    rng = np.random.default_rng(seed)
+    slots = random_slots(inst, rng) if slots0 is None \
+        else np.asarray(slots0).copy()
+    if requests is None:
+        objs, ings = inst.dem.sample(n_iters, rng)
+    else:
+        objs, ings = requests
+    return rng, slots, objs, ings
+
+
 @dataclasses.dataclass
 class SwapState:
     slots: np.ndarray                  # (K,) object ids, −1 empty
@@ -112,13 +131,9 @@ def localswap(inst: Instance, n_iters: int = 20000, seed: int = 0,
     swap acceptance threshold (ΔC < −tol), exposed so differential tests
     can run host and device paths at one decision margin.
     """
-    rng = np.random.default_rng(seed)
-    slots = random_slots(inst, rng) if slots0 is None else slots0.copy()
+    _, slots, objs, ings = emulated_stream(inst, n_iters, seed, slots0,
+                                           requests)
     st = SwapState.init(inst, slots)
-    if requests is None:
-        objs, ings = inst.dem.sample(n_iters, rng)
-    else:
-        objs, ings = requests
     for t in range(len(objs)):
         localswap_step(inst, st, int(objs[t]), int(ings[t]), tol=tol)
         if record_every and t % record_every == 0:

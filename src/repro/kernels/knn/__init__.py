@@ -1,4 +1,4 @@
-from repro.kernels.knn.gains import (placement_gains,
+from repro.kernels.knn.gains import (duel_virtual_costs, placement_gains,
                                      placement_gains_matrix,
                                      sharded_placement_gains)
 from repro.kernels.knn.lsh import (CandidatePolicy, CandidateTables,
@@ -23,6 +23,7 @@ __all__ = ["nearest_approximizer", "pad_for_knn", "knn_ref",
            "CandidateTables", "SimHashPolicy", "KMeansPolicy",
            "default_policy", "stack_shard_tables", "pruned_fused_lookup",
            "pruned_fused_lookup_ref", "sharded_pruned_fused_lookup",
-           "sharded_pruned_fused_lookup_ref", "placement_gains",
+           "sharded_pruned_fused_lookup_ref", "duel_virtual_costs",
+           "placement_gains",
            "placement_gains_matrix", "sharded_placement_gains",
            "placement_gains_ref"]

@@ -66,6 +66,26 @@ def _ca_block(x, y, metric: str, gamma: float):
     return ca
 
 
+def duel_virtual_costs(coords, ca, obj, virt_safe, h_slots,
+                       metric: str, gamma: float, has_ca: bool):
+    """(K,) virtual serving cost C_a(x_o, y_v[k]) + h(i, j(k)) for one
+    request — NETDUEL's per-step pricing tile (paper §5), the 1-row
+    special case of the gain oracle's C_a tiling. On materialized-C_a
+    instances the row gather reproduces the host policy's
+    ``ca[o, virt]`` bit-for-bit; past ``objective.CA_MATERIALIZE_MAX``
+    the tile is computed on the fly by the same :func:`_ca_block` the
+    gain kernels use. Traced inside the NETDUEL scan
+    (core/placement/netduel.py), so ``has_ca`` must be static there.
+    """
+    if has_ca:
+        cac = ca[obj, virt_safe]
+    else:
+        from repro.core import costs
+        cac = costs.approx_cost_stable(coords[obj][None, :],
+                                       coords[virt_safe], metric, gamma)[0]
+    return cac + h_slots
+
+
 def _gains_kernel(x_ref, y_ref, lam_ref, cur_ref, h_ref, out_ref, *,
                   metric: str, gamma: float, n_ingress: int, n_caches: int):
     rt = pl.program_id(1)

@@ -290,7 +290,13 @@ class LookupShardPolicy:
     ``axes`` (see :meth:`gain_shard_args`), so candidate shards are
     co-resident with the data-plane key shards they would populate —
     one placement decision's gains and its eventual cache keys live on
-    the same devices.
+    the same devices. The *online* control plane (NETDUEL's DuelPlane
+    and the scanned LOCALSWAP window, core/placement/netduel.py /
+    device.py) rides them too: a DeviceInstance built from
+    :meth:`gain_shard_args` routes its serving-table refreshes through
+    ``objective.sharded_best_two``, which shard_maps the request axis
+    over the same ``axes`` — the duel state of a key shard's content
+    is refreshed where the keys live.
     """
     mesh: Mesh
     axes: tuple[str, ...]
@@ -325,12 +331,13 @@ class LookupShardPolicy:
         return default_policy(self.prune, seed=self.table_seed)
 
     def gain_shard_args(self) -> tuple[Mesh, tuple[str, ...]] | None:
-        """(mesh, axes) for sharding the placement gain oracle's
-        candidate axis — None when the policy resolves to a single
-        shard (the oracle then runs unsharded, and
-        ``sharded_placement_gains`` would only add shard_map overhead).
-        Values are bit-identical either way (the oracle's per-candidate
-        sums are shard-count-independent by construction)."""
+        """(mesh, axes) for sharding the placement control plane — the
+        gain oracle's candidate axis and the online plane's
+        serving-table request axis (``sharded_best_two``). None when
+        the policy resolves to a single shard (everything then runs
+        unsharded, and the shard_maps would only add overhead). Values
+        are bit-identical either way (per-candidate/per-request sums
+        are shard-count-independent by construction)."""
         if self.n_shards <= 1:
             return None
         return (self.mesh, self.axes)

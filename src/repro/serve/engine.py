@@ -39,12 +39,31 @@ GREEDY/LOCALSWAP loop over jitted incremental updates — so a rolling
 re-placement no longer stalls the host exactly when the catalog grows.
 ``device_placement=False`` keeps the NumPy oracles (the control-plane
 twin of ``fused=False``). The two paths are bit-identical on
-well-separated instances (tests/test_device_placement.py); on an
-*observed* window the ``counts + 1e-9`` demand floor leaves the
-never-requested tail with gains below f32 resolution, so tail slots —
-whose placement is statistically irrelevant — may be filled in a
-different order than the f64 host path would pick.
-``netduel=True`` instead adapts online per request (λ-unaware, §5).
+well-separated instances (tests/test_device_placement.py), and on an
+*observed* window the tail is no longer ambiguous: never-requested
+objects keep an exact-zero rate (``observed_instance`` normalizes the
+raw counts in f64 with no floor), so a candidate whose only value was
+tail demand has a gain of exactly 0.0 on both the f32 device path and
+the f64 host path, and once the real gains are exhausted both paths
+stop at the same point and leave the same slots unfilled — the old
+``counts + 1e-9`` floor put sub-f32-resolution gains everywhere and
+let the two paths fill the statistically-irrelevant tail in different
+orders (regression pinned by tests/test_serve_engine.py::
+test_observed_placement_tail_matches). Near-ties between *requested*
+objects remain subject to the usual f32/f64 caveat of
+core/placement/device.py.
+
+``netduel=True`` additionally runs the §5 online policy *on device,
+inside the serving loop*: a persistent ``DuelPlane``
+(core/placement/netduel.py) keeps the duel state — real/virtual
+savings, deadlines, serving tables — as device arrays sharded
+alongside the data-plane keys (same ``LookupShardPolicy`` axes), and
+each served batch is observed in one ``lax.scan`` launch priced by the
+*same fused-lookup costs the data plane just computed* (a request is
+priced once for serving and dueling). A settled promotion rebuilds the
+runtime cache from the duel's slots (``placement_events`` counts these
+churn events) — the λ-unaware complement of the offline
+``refresh_placement`` solves.
 
 Control-plane/data-plane split: the data plane (lookups) and control
 plane (placement solves) share the mesh and the shard axes picked by
@@ -71,7 +90,7 @@ from repro.configs.base import ArchConfig
 from repro.core import demand as demand_api
 from repro.core.catalog import Catalog
 from repro.core.objective import DeviceInstance, Instance
-from repro.core.placement import (device_greedy,
+from repro.core.placement import (DuelPlane, device_greedy,
                                   device_greedy_then_localswap,
                                   device_localswap, greedy,
                                   greedy_then_localswap, localswap)
@@ -99,6 +118,11 @@ class EngineConfig:
     device_placement: bool = True  # device-resident placement control plane
     swap_tol: float = 1e-3        # device LOCALSWAP accept margin (f32-safe
     #                               at calibrated-ms cost scales)
+    netduel: bool = False         # §5 online duels on device, per batch
+    duel_window: int = 512        # duel length in requests
+    duel_delta: float = 0.05      # relative promotion margin δ
+    duel_arm_prob: float = 0.25   # per-request arming probability
+    duel_seed: int = 0            # arming-randomness seed
 
 
 @dataclasses.dataclass
@@ -133,6 +157,8 @@ class SimCacheEngine:
         self.counts = np.zeros(self.coords.shape[0], dtype=np.float64)
         self.responses: dict[int, np.ndarray] = {}        # payload store
         self.stats = ServeStats()
+        self.duel: DuelPlane | None = None                # online §5 plane
+        self.placement_events = 0                         # duel churn count
         self._prefill = jax.jit(model_api.make_prefill(cfg))
         self.simcache: SimCacheNetwork | None = None
         # key-axis shard policy for the sharded data plane: resolved once
@@ -165,8 +191,22 @@ class SimCacheEngine:
 
     # ----------------------------------------------------- control plane
     def observed_instance(self) -> Instance:
-        lam = self.counts + 1e-9
-        dem = demand_api.Demand(lam=(lam / lam.sum())[None, :])
+        """Empirical demand window as a placement instance.
+
+        Counts are normalized in f64 with *no* floor: never-requested
+        objects keep an exact-zero rate, so every candidate gain they
+        would contribute is exactly 0.0 in f32 and f64 alike and the
+        host/device solvers agree bit-for-bit on the (unplaced) tail —
+        the old ``counts + 1e-9`` floor drowned the tail below f32
+        resolution instead. A cold engine (no requests yet) falls back
+        to uniform demand.
+        """
+        total = self.counts.sum()
+        if total <= 0.0:
+            lam = np.full_like(self.counts, 1.0 / self.counts.size)
+        else:
+            lam = self.counts / total
+        dem = demand_api.Demand(lam=lam[None, :])
         cat = Catalog(coords=self.coords, metric=self.ecfg.metric,
                       gamma=self.ecfg.gamma)
         return Instance(net=self.net, cat=cat, dem=dem)
@@ -206,9 +246,36 @@ class SimCacheEngine:
         else:
             slots = greedy_then_localswap(inst, max_passes=8).slots
         slots = np.where(slots < 0, 0, slots)
+        self._rebuild_simcache(slots, inst.slot_cache)
+        if self.ecfg.netduel:
+            # online §5 plane: duel state lives on device, sharded along
+            # the same axes as the data-plane keys, and persists across
+            # serve() batches (reset on every offline re-solve)
+            sh = (self.lookup_shards.gain_shard_args()
+                  if (self.ecfg.sharded and self.lookup_shards) else None)
+            duel_dinst = DeviceInstance.from_instance(
+                inst, mesh=sh[0] if sh else None,
+                axes=sh[1] if sh else (), materialize_ca=False)
+            self.duel = DuelPlane(
+                duel_dinst, slots, window=self.ecfg.duel_window,
+                delta=self.ecfg.duel_delta,
+                arm_prob=self.ecfg.duel_arm_prob, seed=self.ecfg.duel_seed)
+        if device:
+            # device evaluator — the only C(A) path that exists past
+            # objective.CA_MATERIALIZE_MAX catalogs
+            return dinst.total_cost(slots)
+        return inst.total_cost(slots)
+
+    def _rebuild_simcache(self, slots: np.ndarray,
+                          slot_cache: np.ndarray | None = None) -> None:
+        """(Re)build the runtime lookup network from an allocation —
+        shared by the offline refresh and the online duel's promotion
+        churn."""
+        if slot_cache is None:
+            slot_cache = self.net.slot_layout()
         hs = [0.0, self.ecfg.h_ici, self.ecfg.h_dcn]
         self.simcache = SimCacheNetwork.from_placement(
-            self.coords, slots, inst.slot_cache, hs, self.ecfg.h_model,
+            self.coords, slots, slot_cache, hs, self.ecfg.h_model,
             metric=self.ecfg.metric, gamma=self.ecfg.gamma,
             fused=self.ecfg.fused, sharded=self.ecfg.sharded,
             mesh=self.mesh,
@@ -216,11 +283,6 @@ class SimCacheEngine:
                         if self.lookup_shards else None),
             candidate_policy=(self.lookup_shards.candidate_policy()
                               if self.lookup_shards else None))
-        if device:
-            # device evaluator — the only C(A) path that exists past
-            # objective.CA_MATERIALIZE_MAX catalogs
-            return dinst.total_cost(slots)
-        return inst.total_cost(slots)
 
     # --------------------------------------------------------- data plane
     def serve(self, request_ids: np.ndarray, prompts: jnp.ndarray
@@ -246,6 +308,13 @@ class SimCacheEngine:
                 out[i] = self.responses.get(int(payloads[i]))
             self.stats.n_hits += int(hits.sum())
             miss_idx = np.nonzero(~hits)[0]
+            if self.duel is not None:
+                # online control plane: observe the batch in one scan
+                # launch, priced by the costs the lookup just computed
+                if self.duel.observe(np.asarray(request_ids),
+                                     b1_ext=np.asarray(res.cost)):
+                    self._rebuild_simcache(self.duel.slots_np)
+                    self.placement_events += 1
 
         if len(miss_idx):
             # repository: run the model on the miss sub-batch

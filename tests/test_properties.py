@@ -10,7 +10,12 @@ The paper's structural claims, checked on randomized instances:
     any approximizer never increases any request's cost;
   * LSH/k-means candidate pruning (kernels/knn/lsh.py) — admissibility
     (scanning fewer keys can only raise the winning cost) and the
-    verifier contract (``verify=True`` closes the pruning gap to 0).
+    verifier contract (``verify=True`` closes the pruning gap to 0);
+  * §5 NETDUEL — a promotion never increases the cost measured on the
+    duel's own window requests (the settle rule's defining guarantee);
+  * scanned device control plane — the single-launch while_loop/scan
+    paths are bit-identical to the per-step jitted paths at every
+    ``topk``/window split (pure batching, never a semantics change).
 """
 import itertools
 
@@ -20,8 +25,10 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import catalog, demand, topology
-from repro.core.objective import Instance, random_slots
-from repro.core.placement import greedy, greedy_then_localswap, localswap_polish
+from repro.core.objective import DeviceInstance, Instance, random_slots
+from repro.core.placement import (device_greedy, device_localswap,
+                                  device_netduel, greedy,
+                                  greedy_then_localswap, localswap_polish)
 from repro.core.placement.localswap import is_locally_optimal
 from repro.core.simcache import SimCacheNetwork
 
@@ -177,6 +184,50 @@ def test_pruned_verify_closes_gap(seed, prune):
         np.testing.assert_array_equal(
             np.asarray(getattr(res, name)),
             np.asarray(getattr(exact, name)), err_msg=name)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), delta=st.sampled_from([0.0, 0.05, 0.3]))
+def test_netduel_promotions_never_hurt_window_cost(seed, delta):
+    """§5 settle rule: a virtual wins only with vs > (1+δ)·rs and
+    vs > 0, i.e. on the duel's *own* window requests the promoted
+    object's measured saving strictly exceeds the incumbent's — the
+    window-measured cost change rs − vs is < −δ·rs ≤ 0 for every
+    promotion, on every random instance and margin."""
+    inst = make_random_instance(seed, n_obj=8, k=(2, 2), h_repo=5.0)
+    st_ = device_netduel(DeviceInstance.from_instance(inst),
+                         n_iters=2500, seed=seed + 1, window=120,
+                         delta=delta, arm_prob=0.6, record_events=True)
+    for (t, y, obj, rs, vs) in st_.promotions:
+        assert vs > 0.0
+        assert vs > (1.0 + np.float32(delta)) * np.float32(rs)
+        assert rs - vs < -delta * rs + 1e-9      # window cost never rises
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), topk=st.sampled_from([1, 2, 7, 64]))
+def test_scanned_greedy_bit_identical_at_every_topk(seed, topk):
+    """The single-launch while_loop GREEDY is pure batching: at every
+    stale-refresh width ``topk`` it returns exactly the per-step path's
+    allocation (which is itself the host oracle's)."""
+    inst = make_random_instance(seed, n_obj=7, k=(2, 3), metric="l2")
+    dinst = DeviceInstance.from_instance(inst)
+    stepped = device_greedy(dinst, topk=topk, scan=False)
+    scanned = device_greedy(dinst, topk=topk, scan=True)
+    np.testing.assert_array_equal(stepped, scanned)
+    np.testing.assert_array_equal(scanned, greedy(inst))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_scanned_localswap_bit_identical(seed):
+    """One scan launch per window == one jitted step per request."""
+    inst = make_random_instance(seed, n_obj=8, k=(2, 2), metric="l2")
+    dinst = DeviceInstance.from_instance(inst)
+    a = device_localswap(dinst, n_iters=250, seed=seed, scan=False)
+    b = device_localswap(dinst, n_iters=250, seed=seed, scan=True)
+    np.testing.assert_array_equal(a.slots_np, b.slots_np)
+    assert a.n_swaps == b.n_swaps
 
 
 @settings(max_examples=15, deadline=None)

@@ -4,6 +4,7 @@ import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.registry import get_smoke_config
 from repro.core import catalog as catalog_api
@@ -103,3 +104,69 @@ def test_placement_algorithms_rank_sanely():
         serve_trace(eng, cfg, cat, n_batches=6)
         preds[algo] = eng.refresh_placement(algo)
     assert preds["cascade"] <= preds["greedy"] + 1e-9
+
+
+def test_observed_placement_tail_matches():
+    """Demand-floor regression: the observed window keeps never-requested
+    objects at an *exact-zero* rate (no ``+ 1e-9`` floor), so once the
+    real gains are exhausted both the f64 host solver and the f32 device
+    solver stop at the same pick and leave the same slots empty — the
+    tail-fill ambiguity of the floored demand is gone."""
+    from repro.core.objective import DeviceInstance
+    from repro.core.placement import device_greedy, greedy
+
+    eng, cfg, cat = make_engine(algo="greedy")
+    # a head-only window: 12 requested objects with well-separated
+    # counts against 72 slots forces the zero-gain tail regime
+    eng.counts[:12] = 2.0 ** np.arange(12)
+    inst = eng.observed_instance()
+    assert np.all(inst.lam[0, 12:] == 0.0)
+    host = greedy(inst)
+    dinst = DeviceInstance.from_instance(inst, materialize_ca=False)
+    for scan in (True, False):
+        np.testing.assert_array_equal(
+            host, device_greedy(dinst, scan=scan))
+    assert (host < 0).sum() > 0          # the tail regime was entered
+    # end-to-end: both engine paths produce the same predicted cost and
+    # the same runtime placement
+    pred_dev = eng.refresh_placement(device=True)
+    keys_dev = [np.asarray(lv.keys).copy() for lv in eng.simcache.levels]
+    pred_host = eng.refresh_placement(device=False)
+    keys_host = [np.asarray(lv.keys) for lv in eng.simcache.levels]
+    for a, b in zip(keys_dev, keys_host):
+        np.testing.assert_array_equal(a, b)
+    # predicted C(A) agrees to cost-scale noise (the host MXU-form C_a
+    # carries ~sqrt(eps)·|x| self-distance noise on its diagonal that the
+    # device's shape-stable form does not)
+    assert abs(pred_dev - pred_host) < 1e-3 * eng.ecfg.h_model
+
+
+def test_engine_cold_observed_instance_is_uniform():
+    eng, cfg, cat = make_engine()
+    inst = eng.observed_instance()
+    assert inst.lam.sum() == pytest.approx(1.0)
+    assert np.all(inst.lam == inst.lam[0, 0])
+
+
+def test_engine_netduel_online_plane():
+    """EngineConfig.netduel: the duel plane observes every served batch
+    (priced by the data-plane lookup costs), promotions rebuild the
+    runtime cache, and the engine keeps serving correctly throughout."""
+    eng, cfg, cat = make_engine(algo="greedy")
+    eng.ecfg.netduel = True
+    eng.ecfg.duel_window = 64
+    eng.ecfg.duel_arm_prob = 0.5
+    serve_trace(eng, cfg, cat, n_batches=4)
+    eng.refresh_placement()
+    assert eng.duel is not None
+    assert eng.duel.t == 0
+    stats = serve_trace(eng, cfg, cat, n_batches=16, seed=2)
+    assert eng.duel.t == 16 * 16                 # every batch observed
+    assert eng.duel.n_promotions > 0
+    assert eng.placement_events > 0              # churn rebuilt the cache
+    assert stats.hit_rate > 0.3                  # still serving sanely
+    # the runtime cache serves exactly the duel's current placement
+    stored = np.sort(np.concatenate(
+        [np.asarray(lv.values)[np.asarray(lv.values) >= 0]
+         for lv in eng.simcache.levels]))
+    assert stored.size == eng.duel.slots_np.size

@@ -1,0 +1,111 @@
+"""End-to-end trace-replay regression: the §5 online control plane
+running *inside* the serving engine, locked by a checked-in golden file.
+
+A fixed recorded request trace is replayed through ``serve.Engine`` with
+``EngineConfig.netduel=True``; the golden file pins the served-cost
+trajectory (f32-tol floats) and the placement churn (tolerance-free
+ints: per-batch hit counts, promotion counts, churn-event batches, and
+the final duel slots). Any silent drift in the data-plane/control-plane
+fusion — lookup costs feeding the duel, promotions rebuilding the
+runtime cache, the arming rng, the observed-demand normalization —
+shows up as a golden mismatch.
+
+Regenerate after an *intentional* behavior change with:
+
+    PYTHONPATH=src python tests/test_trace_replay.py --write
+"""
+import dataclasses
+import json
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "netduel_trace.json")
+
+
+def _build_engine():
+    from repro.configs.registry import get_smoke_config
+    from repro.core import catalog as catalog_api
+    from repro.models import model as model_api
+    from repro.serve import EngineConfig, SimCacheEngine
+
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              n_layers=2, d_model=64, n_heads=4,
+                              n_kv_heads=2, head_dim=16, d_ff=128,
+                              vocab=256)
+    params = model_api.init_params(cfg, 0)
+    cat = catalog_api.embedding_catalog(n=300, dim=16, seed=1)
+    ecfg = EngineConfig(k_device=8, k_pod=12, k_global=16,
+                        h_ici=1.0, h_dcn=10.0, h_model=100.0,
+                        metric="l2", algo="greedy", netduel=True,
+                        duel_window=64, duel_arm_prob=0.5, duel_seed=0)
+    return SimCacheEngine(cfg, params, ecfg, cat.coords), cfg, cat
+
+
+def _replay():
+    """The recorded trace: 4 cold batches, one offline refresh (arming
+    the duel plane), 24 warm batches observed by the duel."""
+    from repro.core import demand as demand_api
+
+    eng, cfg, cat = _build_engine()
+    rng = np.random.default_rng(0)
+    dem = demand_api.zipf(cat, alpha=1.1, seed=3)
+
+    def batch():
+        ids, _ = dem.sample(16, rng)
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab, (16, 8)).astype(np.int32))
+        return ids, prompts
+
+    for _ in range(4):
+        eng.serve(*batch())
+    eng.refresh_placement()
+    assert eng.duel is not None
+    cost_traj, hits_traj, churn_batches, promo_traj = [], [], [], []
+    for b in range(24):
+        before = eng.placement_events
+        _, stats = eng.serve(*batch())
+        cost_traj.append(stats.total_cost)
+        hits_traj.append(stats.n_hits)
+        promo_traj.append(eng.duel.n_promotions)
+        if eng.placement_events > before:
+            churn_batches.append(b)
+    return {
+        "cost_trajectory": cost_traj,
+        "hits_trajectory": hits_traj,
+        "promotions_trajectory": promo_traj,
+        "churn_batches": churn_batches,
+        "placement_events": eng.placement_events,
+        "final_duel_slots": [int(s) for s in eng.duel.slots_np],
+        "duel_served_cost": eng.duel.served_cost,
+    }
+
+
+def test_netduel_trace_replay_matches_golden():
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    got = _replay()
+    # tolerance-free ints: churn, hits, promotions, final placement
+    assert got["hits_trajectory"] == golden["hits_trajectory"]
+    assert got["promotions_trajectory"] == golden["promotions_trajectory"]
+    assert got["churn_batches"] == golden["churn_batches"]
+    assert got["placement_events"] == golden["placement_events"]
+    assert got["final_duel_slots"] == golden["final_duel_slots"]
+    # f32-tol costs (accumulated lookup costs / duel pricing)
+    np.testing.assert_allclose(got["cost_trajectory"],
+                               golden["cost_trajectory"], rtol=1e-5)
+    np.testing.assert_allclose(got["duel_served_cost"],
+                               golden["duel_served_cost"], rtol=1e-5)
+
+
+if __name__ == "__main__":
+    if "--write" in sys.argv:
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            json.dump(_replay(), f, indent=1)
+        print(f"wrote {GOLDEN}")
+    else:
+        print(__doc__)
