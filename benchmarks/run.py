@@ -16,13 +16,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (L=100, 10k items; slow)")
     ap.add_argument("--only", default="",
-                    help="comma list: fig3,fig4,fig56,fig78,kernels,roofline")
+                    help="comma list: fig3,fig4,fig56,fig78,kernels,"
+                         "roofline,serving")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig3_tandem, fig4_allocations,
                             fig56_both_arrivals, fig78_trace, kernel_bench,
-                            roofline_table)
+                            roofline_table, serving_bench)
 
     t0 = time.time()
     checks: dict = {}
@@ -48,6 +49,8 @@ def main() -> None:
         kernel_bench.run()
     if want("roofline"):
         roofline_table.run()
+    if want("serving"):
+        serving_bench.run(smoke=not args.full)
 
     print(f"\n== paper-claim checks ({time.time()-t0:.0f}s) ==")
     n_fail = 0

@@ -1,0 +1,178 @@
+"""Streaming serving benchmark: batch bucketing vs per-size retracing,
+and the multi-stream driver with the double-buffered placement refresh.
+
+Rows (results/bench/serving.json):
+
+* ``bucketing/mixed_sizes`` — the same mixed-batch-size request trace
+  (many distinct sizes, the shape of an arrival-driven stream) served
+  twice from a cold jit cache: once with ``EngineConfig.bucket=False``
+  (one XLA compile per distinct size per entry point — fused lookup,
+  duel scan, miss prefill) and once with the bucketed path (one compile
+  per power-of-two bucket). Timing *includes* the compiles — sustained
+  requests/s is exactly what a serving process sees on a fresh stream.
+  ``speedup = bucketed_rps / unbucketed_rps``; the trace counters
+  (repro.tracecount) record how many compiles each leg actually paid.
+* ``driver/max_batch{B}`` — a StreamDriver run (3 Poisson streams
+  multiplexed on a virtual clock) at ≥3 batch-size caps: sustained
+  requests/s, p50/p95/p99 batch latency, background-refresh cadence
+  (``refresh_every`` batches), atomic-swap counts and stall time.
+  ``stall_bounded_by_batch`` asserts the double-buffer contract: the
+  longest serving-thread stall a placement refresh ever caused
+  (``max_swap_stall_ms``) stays below the longest single batch — the
+  solve itself never blocks the request path.
+
+``--smoke`` shrinks the trace for CI (scripts/ci.sh runs it on every
+push); ``SERVING_BENCH_FULL=1`` widens the sweep (more distinct sizes,
+longer driver runs) like the other *_BENCH_FULL nightly gates. The
+committed serving.json comes from a default (non-smoke) run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line, save_json
+from repro import tracecount
+from repro.configs.registry import get_smoke_config
+from repro.core import catalog as catalog_api
+from repro.core import demand as demand_api
+from repro.models import model as model_api
+from repro.serve import (EngineConfig, SimCacheEngine, StreamDriver,
+                         StreamSpec)
+
+
+def build_engine(bucket: bool = True, netduel: bool = True,
+                 refresh_on_promotion: bool = False,
+                 n_objects: int = 400):
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              n_layers=2, d_model=64, n_heads=4,
+                              n_kv_heads=2, head_dim=16, d_ff=128,
+                              vocab=256)
+    params = model_api.init_params(cfg, 0)
+    cat = catalog_api.embedding_catalog(n=n_objects, dim=16, seed=1)
+    ecfg = EngineConfig(k_device=16, k_pod=24, k_global=32,
+                        h_ici=1.0, h_dcn=10.0, h_model=100.0,
+                        metric="l2", algo="greedy", netduel=netduel,
+                        duel_window=128, duel_arm_prob=0.5, duel_seed=0,
+                        bucket=bucket,
+                        refresh_on_promotion=refresh_on_promotion)
+    return SimCacheEngine(cfg, params, ecfg, cat.coords), cfg, cat
+
+
+def mixed_trace(cat, cfg, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    dem = demand_api.zipf(cat, alpha=1.1, seed=3)
+    out = []
+    for k in sizes:
+        ids, _ = dem.sample(k, rng)
+        out.append((ids, jnp.asarray(
+            rng.integers(0, cfg.vocab, (k, 8)).astype(np.int32))))
+    return out
+
+
+def bench_bucketing(n_distinct: int) -> dict:
+    """Serve one mixed-batch-size trace through both engine modes from a
+    cold jit cache each; wall clock includes every compile."""
+    rng = np.random.default_rng(7)
+    # distinct sizes spread over [1, 96]: ~5 power-of-two buckets but
+    # n_distinct separate XLA compiles for the unbucketed path
+    sizes = list(rng.choice(np.arange(1, 97), size=n_distinct,
+                            replace=False))
+    sizes = [int(s) for s in sizes] * 2          # revisit each size once
+    leg = {}
+    for bucket in (False, True):
+        eng, cfg, cat = build_engine(bucket=bucket)
+        trace = mixed_trace(cat, cfg, [32] * 4, seed=9)
+        for ids, prompts in trace:               # cold fill
+            eng.serve(ids, prompts)
+        eng.refresh_placement()
+        work = mixed_trace(cat, cfg, sizes, seed=1)
+        with tracecount.snapshot() as s:
+            t0 = time.perf_counter()
+            for ids, prompts in work:
+                eng.serve(ids, prompts)
+            dt = time.perf_counter() - t0
+            traces = s.delta("fused_lookup") + s.delta("duel_scan")
+        n_req = sum(len(ids) for ids, _ in work)
+        leg[bucket] = {"rps": n_req / dt, "wall_s": dt, "traces": traces,
+                       "n_requests": n_req}
+    row = {"name": "bucketing/mixed_sizes",
+           "n_batches": len(sizes),
+           "distinct_sizes": len(set(sizes)),
+           "n_requests": leg[True]["n_requests"],
+           "unbucketed_rps": leg[False]["rps"],
+           "unbucketed_wall_s": leg[False]["wall_s"],
+           "unbucketed_traces": leg[False]["traces"],
+           "bucketed_rps": leg[True]["rps"],
+           "bucketed_wall_s": leg[True]["wall_s"],
+           "bucketed_traces": leg[True]["traces"],
+           "speedup": leg[True]["rps"] / leg[False]["rps"]}
+    csv_line(row["name"], leg[True]["wall_s"] * 1e6,
+             f"speedup={row['speedup']:.1f}x,"
+             f"traces={row['bucketed_traces']}v{row['unbucketed_traces']}")
+    return row
+
+
+def bench_driver(max_batch: int, n_requests: int,
+                 refresh_every: int = 8) -> dict:
+    """One StreamDriver run: 3 Poisson streams, cadence-triggered
+    background refreshes swapped in between batches."""
+    eng, cfg, cat = build_engine(refresh_on_promotion=True)
+    streams = [
+        StreamSpec(demand=demand_api.zipf(cat, alpha=1.1, seed=s + 1),
+                   rate=[5.0, 9.0, 2.0][s], seed=s + 1, name=f"user{s}")
+        for s in range(3)]
+    drv = StreamDriver(eng, streams, max_batch=max_batch,
+                       batch_window=2.0, refresh_every=refresh_every)
+    drv.run(max(n_requests // 8, max_batch))     # warm + observe demand
+    eng.refresh_placement()
+    st = drv.run(n_requests)
+    drv.drain_refresh()
+    max_batch_ms = max(st.batch_latencies_ms)
+    row = {"name": f"driver/max_batch{max_batch}",
+           "n_requests": st.n_requests, "n_batches": st.n_batches,
+           "distinct_batch_sizes": st.distinct_batch_sizes,
+           "requests_per_s": st.requests_per_s,
+           "p50_ms": st.p50_ms, "p95_ms": st.p95_ms, "p99_ms": st.p99_ms,
+           "refresh_every": refresh_every,
+           "refreshes_started": st.refreshes_started,
+           "swaps": st.swaps,
+           "placement_events": st.placement_events,
+           "swap_stall_s": st.swap_stall_s,
+           "max_swap_stall_ms": st.max_swap_stall_s * 1e3,
+           "max_batch_latency_ms": max_batch_ms,
+           "stall_bounded_by_batch":
+               bool(st.max_swap_stall_s * 1e3 <= max_batch_ms),
+           "hit_rate": eng.stats.hit_rate,
+           "final_version": eng.placement.version}
+    assert row["stall_bounded_by_batch"], \
+        "placement swap stalled serving longer than one batch"
+    csv_line(row["name"], st.p50_ms * 1e3,
+             f"rps={st.requests_per_s:.0f},p99_ms={st.p99_ms:.0f},"
+             f"swaps={st.swaps},max_stall_ms="
+             f"{row['max_swap_stall_ms']:.1f}")
+    return row
+
+
+def run(smoke: bool = False) -> dict:
+    full = bool(os.environ.get("SERVING_BENCH_FULL"))
+    if smoke:
+        n_distinct, driver_caps, n_req = 6, (32, 64), 300
+    elif full:
+        n_distinct, driver_caps, n_req = 32, (32, 64, 128, 256), 4000
+    else:
+        n_distinct, driver_caps, n_req = 16, (64, 128, 256), 1500
+    rows = [bench_bucketing(n_distinct)]
+    for cap in driver_caps:
+        rows.append(bench_driver(cap, n_req))
+    save_json("serving.json", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

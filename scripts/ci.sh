@@ -49,7 +49,14 @@ fi
 python -m pytest -x -q ${MARKER[@]+"${MARKER[@]}"} "$@"
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q -m "not slow" -k "not _subprocess" "$@"
+# streaming serving smoke: bucketed-vs-unbucketed speedup, driver rows,
+# and the swap-stall bound are asserted inside the bench itself
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/serving_bench.py --smoke
 if [[ "${CI_FULL:-0}" == "1" ]]; then
     PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" PLACEMENT_BENCH_FULL=1 \
         python benchmarks/placement_bench.py
+    # nightly serving sweep: more distinct sizes, longer driver runs
+    PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" SERVING_BENCH_FULL=1 \
+        python benchmarks/serving_bench.py
 fi

@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import tracecount
 from repro.core.objective import DeviceInstance, Instance
 from repro.core.placement.localswap import SwapState, emulated_stream
 
@@ -200,12 +201,12 @@ def _duel_carry(dinst: DeviceInstance, slots: np.ndarray):
 
 @functools.partial(jax.jit, static_argnames=(
     "metric", "gamma", "has_ca", "record_events", "external_b1",
-    "record_every", "mesh", "axes"))
+    "record_every", "mesh", "axes", "masked"))
 def _duel_scan(coords, ca, lam, H, h_repo, slot_cache, h_slots, on_path,
                carry, xs, one_delta, window,
                metric: str, gamma: float, has_ca: bool,
                record_events: bool, external_b1: bool, record_every: int,
-               mesh, axes):
+               mesh, axes, masked: bool = False):
     """One launch over a request window: lax.scan of the NETDUEL step.
 
     Per step: price the request against the serving tables (or take the
@@ -217,9 +218,18 @@ def _duel_scan(coords, ca, lam, H, h_repo, slot_cache, h_slots, on_path,
     ``mesh`` is set), and arm a new duel from the precomputed draws.
     Emits the per-step served cost (always), promotion events and
     sub-sampled cost-trace points (statically gated).
+
+    ``masked=True`` appends a per-step validity flag to ``xs`` (the
+    bucketed engine path: batches padded to power-of-two buckets so the
+    scan compiles once per bucket, not once per batch size). An invalid
+    step is a complete no-op — no savings, no settle, no arming, no
+    promotion count, zero emitted cost — so the carry after a padded
+    window is bit-identical to the carry after the unpadded one.
     """
     from repro.core.objective import best_two_refresh
     from repro.kernels.knn.gains import duel_virtual_costs
+
+    tracecount.bump("duel_scan")
 
     def refresh(slots):
         return best_two_refresh(coords, ca, slots, slot_cache, H, h_repo,
@@ -227,6 +237,10 @@ def _duel_scan(coords, ca, lam, H, h_repo, slot_cache, h_slots, on_path,
 
     def step(c, x):
         slots, best1, arg1, best2, virt, rs, vs, deadline, n_prom = c
+        if masked:
+            *x, valid = x
+        else:
+            valid = jnp.bool_(True)
         if external_b1:
             o, i, t, armf, slotu, b1 = x
         else:
@@ -236,17 +250,17 @@ def _duel_scan(coords, ca, lam, H, h_repo, slot_cache, h_slots, on_path,
 
         # real saving — scatter to the winning slot (no-op for repo hits)
         rs = rs.at[jnp.maximum(a1, 0)].add(
-            jnp.where(a1 >= 0, best2[i, o] - b1, jnp.float32(0)))
+            jnp.where(valid & (a1 >= 0), best2[i, o] - b1, jnp.float32(0)))
 
         # virtual savings — the gain-machinery pricing tile
         armed = virt >= 0
         vcost = duel_virtual_costs(coords, ca, o, jnp.maximum(virt, 0),
                                    h_slots[i], metric, gamma, has_ca)
-        vs = jnp.where(armed, vs + jnp.maximum(b1 - vcost, jnp.float32(0)),
-                       vs)
+        vs = jnp.where(valid & armed,
+                       vs + jnp.maximum(b1 - vcost, jnp.float32(0)), vs)
 
         # settle expired duels
-        expired = armed & (deadline <= t)
+        expired = valid & armed & (deadline <= t)
         promote = expired & (vs > one_delta * rs) & (vs > 0.0)
         any_p = jnp.any(promote)
         slots = jnp.where(promote, virt, slots)
@@ -261,7 +275,7 @@ def _duel_scan(coords, ca, lam, H, h_repo, slot_cache, h_slots, on_path,
         # arm a new duel on a uniformly random free on-path slot
         free = (virt < 0) & on_path[i]
         n_free = jnp.sum(free, dtype=jnp.int32)
-        arm = armf & (n_free > 0)
+        arm = valid & armf & (n_free > 0)
         m = jnp.minimum((slotu * n_free.astype(jnp.float32))
                         .astype(jnp.int32), n_free - 1)
         y_arm = (jnp.cumsum(free) - 1 == m) & free & arm
@@ -270,7 +284,7 @@ def _duel_scan(coords, ca, lam, H, h_repo, slot_cache, h_slots, on_path,
         rs = jnp.where(y_arm, jnp.float32(0), rs)
         vs = jnp.where(y_arm, jnp.float32(0), vs)
 
-        out = (b1,)
+        out = (jnp.where(valid, b1, jnp.float32(0)),)
         if record_every:
             out += (jax.lax.cond(
                 t % record_every == 0,
@@ -284,12 +298,25 @@ def _duel_scan(coords, ca, lam, H, h_repo, slot_cache, h_slots, on_path,
     return jax.lax.scan(step, carry, xs)
 
 
-def _duel_xs(objs, ings, t0, arm_flags, slot_draws, b1_ext=None):
+def _duel_xs(objs, ings, t0, arm_flags, slot_draws, b1_ext=None,
+             valid=None):
+    """Scan inputs. ``valid`` (bool mask) appends the bucketing validity
+    flag; invalid rows reuse the last valid row's ``t`` so the duel
+    timeline only advances with real requests (deadlines are measured in
+    served requests, not in padded scan steps)."""
+    n = len(objs)
+    if valid is None:
+        ts = np.arange(t0, t0 + n, dtype=np.int32)
+    else:
+        valid = np.asarray(valid, bool)
+        ts = (t0 + np.maximum(np.cumsum(valid) - 1, 0)).astype(np.int32)
     xs = (jnp.asarray(objs, jnp.int32), jnp.asarray(ings, jnp.int32),
-          jnp.arange(t0, t0 + len(objs), dtype=jnp.int32),
+          jnp.asarray(ts),
           jnp.asarray(arm_flags), jnp.asarray(slot_draws, jnp.float32))
     if b1_ext is not None:
         xs += (jnp.asarray(b1_ext, jnp.float32),)
+    if valid is not None:
+        xs += (jnp.asarray(valid),)
     return xs
 
 
@@ -382,6 +409,13 @@ class DuelPlane:
     them — the request is then priced once for serving and dueling.
     Returns True iff at least one promotion settled in the batch, i.e.
     the placement changed and the data-plane cache must be rebuilt.
+
+    ``n_valid`` marks a *bucketed* batch (serve/engine.py): only the
+    first ``n_valid`` rows are real requests, the tail is power-of-two
+    padding. Randomness is drawn for the valid prefix only and the scan
+    masks the padded steps into no-ops, so the duel trajectory is
+    bit-identical to observing the unpadded batch — while the scan
+    compiles once per bucket size instead of once per batch size.
     """
 
     def __init__(self, dinst: DeviceInstance, slots0: np.ndarray,
@@ -399,22 +433,35 @@ class DuelPlane:
         self._args = _scan_args(dinst)
 
     def observe(self, objs: np.ndarray, ings: np.ndarray | None = None,
-                b1_ext: np.ndarray | None = None) -> bool:
+                b1_ext: np.ndarray | None = None,
+                n_valid: int | None = None) -> bool:
         objs = np.asarray(objs)
         if ings is None:
             ings = np.zeros(objs.shape[0], np.int64)
-        arm_flags = self.rng.random(objs.shape[0]) < self.arm_prob
-        slot_draws = self.rng.random(objs.shape[0])
+        # masked whenever the caller buckets, even with zero padding rows:
+        # one compiled scan per bucket size, not two (padded + exact-fit)
+        masked = n_valid is not None
+        n_real = objs.shape[0] if n_valid is None else int(n_valid)
+        # draw only for real requests: the rng stream position after a
+        # bucketed observe equals the unpadded one (bit-identical replay)
+        arm_flags = np.zeros(objs.shape[0], bool)
+        slot_draws = np.zeros(objs.shape[0], np.float64)
+        arm_flags[:n_real] = self.rng.random(n_real) < self.arm_prob
+        slot_draws[:n_real] = self.rng.random(n_real)
+        valid = None
+        if masked:
+            valid = np.zeros(objs.shape[0], bool)
+            valid[:n_real] = True
         ca, h_slots, on_path, mesh, axes = self._args
         xs = _duel_xs(objs, ings, self.t, arm_flags, slot_draws,
-                      b1_ext=b1_ext)
+                      b1_ext=b1_ext, valid=valid)
         d = self.dinst
         self.carry, out = _duel_scan(
             d.coords, ca, d.lam, d.H, d.h_repo, d.slot_cache, h_slots,
             on_path, self.carry, xs, self.one_delta,
             jnp.int32(self.window), d.metric, d.gamma, d.ca is not None,
-            False, b1_ext is not None, 0, mesh, axes)
-        self.t += objs.shape[0]
+            False, b1_ext is not None, 0, mesh, axes, masked=masked)
+        self.t += n_real
         self.served_cost += float(np.asarray(out[0], np.float64).sum())
         n_prom = int(self.carry[8])
         changed = n_prom > self.n_promotions

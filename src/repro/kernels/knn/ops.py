@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro import tracecount
 from repro.kernels.knn.knn import (DEFAULT_BK, DEFAULT_BQ, _INF,
                                    fused_lookup_pallas, knn_pallas)
 from repro.kernels.knn.lsh import (candidate_matrix, candidate_union,
@@ -111,6 +112,7 @@ def fused_lookup(queries: jax.Array, keys: jax.Array, h_key: jax.Array,
     shard-local half of ``sharded_fused_lookup``); with no valid key the
     result is (+INF, 0, repo_level, 0, −1).
     """
+    tracecount.bump("fused_lookup")          # once per trace, not per call
     nq = queries.shape[0]
     if keys.shape[0] == 0:          # no cache keys at all → repository
         cost0 = h_repo if fold_repo else _INF
@@ -182,6 +184,7 @@ def sharded_fused_lookup(queries: jax.Array, keys: jax.Array,
     winner and folds the repository, bit-identical to the single-device
     fused path.
     """
+    tracecount.bump("sharded_fused_lookup")
     n_shards = mesh_axes_size(mesh, axes)
     K = keys.shape[0]
     assert K % n_shards == 0, (K, n_shards)

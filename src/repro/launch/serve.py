@@ -4,6 +4,16 @@ narrated version).
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
       --requests 256
+
+``--streaming`` switches from the fixed-batch replay loop to the async
+multi-stream driver (serve/stream.py): N Poisson request streams
+multiplexed into bucketed batches, placement refreshed through the
+double buffer in the background (cadence via ``--refresh-every``, plus
+NETDUEL promotion churn when ``--netduel``) and swapped in atomically
+between batches — the loop never blocks on a solve.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+      --streaming --streams 4 --requests 1024 --netduel
 """
 from __future__ import annotations
 
@@ -16,28 +26,11 @@ from repro.configs.registry import get_smoke_config, list_archs
 from repro.core import catalog as catalog_api
 from repro.core import demand as demand_api
 from repro.models import model as model_api
-from repro.serve import EngineConfig, SimCacheEngine
+from repro.serve import (EngineConfig, SimCacheEngine, StreamDriver,
+                         StreamSpec)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list_archs())
-    ap.add_argument("--requests", type=int, default=256)
-    ap.add_argument("--batch", type=int, default=16)
-    ap.add_argument("--algo", default="cascade",
-                    choices=["greedy", "localswap", "cascade"])
-    args = ap.parse_args()
-
-    cfg = get_smoke_config(args.arch)
-    if cfg.is_encdec or cfg.mrope:
-        raise SystemExit("serve launcher demo supports decoder-only archs")
-    params = model_api.init_params(cfg, 0)
-    cat = catalog_api.embedding_catalog(n=1000, dim=32, seed=0)
-    dem = demand_api.zipf(cat, alpha=1.0, seed=1)
-    eng = SimCacheEngine(cfg, params, EngineConfig(algo=args.algo),
-                         cat.coords)
-    eng.calibrate(jnp.zeros((args.batch, 16), jnp.int32))
-
+def run_batch_loop(eng, cfg, dem, args) -> None:
     rng = np.random.default_rng(0)
     n_batches = args.requests // args.batch
     for i in range(n_batches):
@@ -48,6 +41,61 @@ def main() -> None:
         if i == n_batches // 2:
             pred = eng.refresh_placement()
             print(f"[serve] placement refreshed; predicted C(A)={pred:.2f}")
+
+
+def run_streaming(eng, cat, args) -> None:
+    streams = [
+        StreamSpec(demand=demand_api.zipf(cat, alpha=1.0, seed=s + 1),
+                   rate=1.0 + s, seed=s + 1, name=f"stream{s}")
+        for s in range(args.streams)]
+    drv = StreamDriver(eng, streams, max_batch=args.batch * 4,
+                       batch_window=2.0, prompt_len=16,
+                       refresh_every=args.refresh_every)
+    drv.run(max(args.requests // 8, args.batch))   # observe demand cold
+    pred = eng.refresh_placement()
+    print(f"[serve] initial placement; predicted C(A)={pred:.2f}")
+    st = drv.run(args.requests)
+    drv.drain_refresh()
+    print(f"[serve] streaming: {st.n_requests} requests in "
+          f"{st.n_batches} batches ({st.distinct_batch_sizes} distinct "
+          f"sizes), {st.requests_per_s:.0f} req/s, latency p50/p95/p99 "
+          f"{st.p50_ms:.0f}/{st.p95_ms:.0f}/{st.p99_ms:.0f} ms")
+    print(f"[serve] refreshes {st.refreshes_started} swaps {st.swaps} "
+          f"(max stall {st.max_swap_stall_s*1e3:.1f} ms) duel churn "
+          f"{st.placement_events}; placement v{eng.placement.version}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--algo", default="cascade",
+                    choices=["greedy", "localswap", "cascade"])
+    ap.add_argument("--streaming", action="store_true",
+                    help="async multi-stream driver + background refresh")
+    ap.add_argument("--streams", type=int, default=4)
+    ap.add_argument("--refresh-every", type=int, default=16,
+                    help="background re-solve cadence, in batches")
+    ap.add_argument("--netduel", action="store_true",
+                    help="§5 online duels; churn triggers refreshes too")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    if cfg.is_encdec or cfg.mrope:
+        raise SystemExit("serve launcher demo supports decoder-only archs")
+    params = model_api.init_params(cfg, 0)
+    cat = catalog_api.embedding_catalog(n=1000, dim=32, seed=0)
+    dem = demand_api.zipf(cat, alpha=1.0, seed=1)
+    ecfg = EngineConfig(algo=args.algo, netduel=args.netduel,
+                        refresh_on_promotion=args.netduel)
+    eng = SimCacheEngine(cfg, params, ecfg, cat.coords)
+    eng.calibrate(jnp.zeros((args.batch, 16), jnp.int32))
+
+    if args.streaming:
+        run_streaming(eng, cat, args)
+    else:
+        run_batch_loop(eng, cfg, dem, args)
     s = eng.stats
     print(f"[serve] {s.n_requests} requests, hit-rate {s.hit_rate:.1%}, "
           f"mean cost {s.mean_cost:.2f} ms, model batches {s.model_calls}")

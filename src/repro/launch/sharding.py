@@ -342,6 +342,17 @@ class LookupShardPolicy:
             return None
         return (self.mesh, self.axes)
 
+    def control_plane_args(self, enabled: bool = True
+                           ) -> tuple[Mesh, tuple[str, ...]] | None:
+        """Single resolution point for every control-plane consumer in
+        the serving engine (offline solver, duel plane, background
+        refresh): :meth:`gain_shard_args` when the engine's data plane
+        is actually sharded (``enabled``), else None — so a policy held
+        for pruning-table seeds alone never turns on shard_maps."""
+        if not enabled:
+            return None
+        return self.gain_shard_args()
+
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())

@@ -1,3 +1,8 @@
-from repro.serve.engine import EngineConfig, ServeStats, SimCacheEngine
+from repro.serve.engine import (EngineConfig, PlacementBuffer, ServeStats,
+                                SimCacheEngine, bucket_size)
+from repro.serve.stream import (DriverStats, RequestStream, StreamDriver,
+                                StreamSpec)
 
-__all__ = ["SimCacheEngine", "EngineConfig", "ServeStats"]
+__all__ = ["SimCacheEngine", "EngineConfig", "ServeStats",
+           "PlacementBuffer", "bucket_size", "StreamDriver", "StreamSpec",
+           "RequestStream", "DriverStats"]

@@ -20,11 +20,43 @@ scan (per shard when sharded) for catalogs ≫ 10⁵ keys;
 ``EngineConfig.verify`` keeps the exact scan as the verifier of last
 resort, re-scanning any query past the pruning bound.
 
+Batch bucketing (``EngineConfig.bucket``, default on): every served
+batch is padded up to a power-of-two bucket (≥ ``min_bucket``) before
+touching a jitted entry point — the fused lookup, the duel scan
+(``DuelPlane.observe(n_valid=…)``), and the miss-prefill each compile
+once per *bucket*, not once per distinct batch size. Padding rows are
+masked everywhere: they never enter ``counts``, ``ServeStats``, the
+duel trajectory (bit-identical to the unpadded one — the masked-scan
+contract of core/placement/netduel.py), or the responses returned.
+Without bucketing a mixed-batch-size request stream pays one XLA
+compile per new size per entry point — the retrace pathology the
+streaming driver (serve/stream.py) and benchmarks/serving_bench.py
+quantify.
+
+Double-buffered placement: the active data plane lives in a versioned
+:class:`PlacementBuffer` (simcache + the allocation it serves).
+``refresh_placement`` stays the synchronous path (solve, install, swap
+— one call); the streaming path splits it: ``request_refresh`` snapshots
+the observed demand and solves GREEDY/LOCALSWAP on the device control
+plane *in a background thread while the old placement keeps serving*,
+and ``poll_refresh`` installs a finished solve with one atomic swap
+(rebuild the runtime network host-side, re-arm the duel plane, bump
+``PlacementBuffer.version``). The swap — never the solve — is the only
+serving-thread stall, timed into ``swap_stall_s``/``max_swap_stall_s``;
+``refresh_in_flight`` and the version counter make the whole cycle
+observable and race-free (the worker only writes the pending result
+under a lock; the serving thread swaps it in between batches).
+
 Cost-unit calibration: ``h`` values and C_a live in the same unit —
 milliseconds of serving latency — via :meth:`calibrate`, which times one
 model decode batch (the repository cost h_s) and scales the
 dissimilarity metric so the paper's efficiency/accuracy trade-off is a
-latency trade-off (γ keeps its role).
+latency trade-off (γ keeps its role). Calibration *invalidates the
+active placement buffer*: an already-built simcache indexes the old h
+costs (and its memoized LSH tables / shard layouts index that stale
+layout), so the runtime network is rebuilt from the held allocation
+with the measured costs — the staleness this used to leave behind is
+pinned by tests/test_serve_engine.py::test_calibrate_rebuilds_simcache.
 
 Placement control plane: the engine records empirical demand; calling
 ``refresh_placement(algo)`` re-solves the offline problem (GREEDY /
@@ -45,7 +77,7 @@ objects keep an exact-zero rate (``observed_instance`` normalizes the
 raw counts in f64 with no floor), so a candidate whose only value was
 tail demand has a gain of exactly 0.0 on both the f32 device path and
 the f64 host path, and once the real gains are exhausted both paths
-stop at the same point and leave the same slots unfilled — the old
+stop at the same pick and leave the same slots unfilled — the old
 ``counts + 1e-9`` floor put sub-f32-resolution gains everywhere and
 let the two paths fill the statistically-irrelevant tail in different
 orders (regression pinned by tests/test_serve_engine.py::
@@ -63,13 +95,17 @@ each served batch is observed in one ``lax.scan`` launch priced by the
 priced once for serving and dueling). A settled promotion rebuilds the
 runtime cache from the duel's slots (``placement_events`` counts these
 churn events) — the λ-unaware complement of the offline
-``refresh_placement`` solves.
+``refresh_placement`` solves. With ``refresh_on_promotion=True`` a
+settled promotion additionally *triggers* a background offline rebuild
+(``request_refresh``): the duel's churn is the signal that observed
+demand drifted enough to justify re-solving — the rebuild trigger of
+the streaming loop.
 
 Control-plane/data-plane split: the data plane (lookups) and control
 plane (placement solves) share the mesh and the shard axes picked by
 ``LookupShardPolicy``, but run disjoint kernels — a placement refresh
-is a burst of gain-oracle launches between serving batches, never on
-the serving path itself.
+is a burst of gain-oracle launches between serving batches (or on the
+background thread), never on the serving path itself.
 
 Straggler mitigation: ``HedgedLookup`` (ft/straggler.py) wraps the
 per-level lookups; a slow level is cut off and served by the next level
@@ -80,6 +116,7 @@ quantified with the paper's own objective).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 
 import jax
@@ -98,6 +135,30 @@ from repro.core.simcache import SimCacheNetwork
 from repro.core.topology import tpu_hierarchy
 from repro.launch.sharding import LookupShardPolicy
 from repro.models import model as model_api
+
+
+def bucket_size(n: int, lo: int = 8) -> int:
+    """Smallest power-of-two bucket ≥ max(n, lo) — the shape every jitted
+    serving entry point actually sees under ``EngineConfig.bucket``."""
+    m = max(int(lo), 1)
+    while m < n:
+        m <<= 1
+    return m
+
+
+def _pad_rows(x, m: int):
+    """Pad axis 0 up to m rows by repeating row 0 (a always-valid filler:
+    real coordinates / real tokens, so padded rows can never produce
+    NaN/inf that a zero-filler might under exotic metrics). Results for
+    padding rows are discarded by the caller — per-row kernel outputs
+    are independent, so the first n rows are bitwise the unpadded run's."""
+    n = x.shape[0]
+    if m <= n:
+        return x
+    reps = jnp.repeat(x[:1], m - n, axis=0) if isinstance(x, jax.Array) \
+        else np.repeat(x[:1], m - n, axis=0)
+    cat = jnp.concatenate if isinstance(x, jax.Array) else np.concatenate
+    return cat([x, reps], axis=0)
 
 
 @dataclasses.dataclass
@@ -123,6 +184,9 @@ class EngineConfig:
     duel_delta: float = 0.05      # relative promotion margin δ
     duel_arm_prob: float = 0.25   # per-request arming probability
     duel_seed: int = 0            # arming-randomness seed
+    bucket: bool = True           # power-of-two batch bucketing
+    min_bucket: int = 8           # smallest bucket (tiny batches coalesce)
+    refresh_on_promotion: bool = False  # duel churn → background re-solve
 
 
 @dataclasses.dataclass
@@ -132,6 +196,9 @@ class ServeStats:
     total_cost: float = 0.0
     total_approx_cost: float = 0.0
     model_calls: int = 0
+    # wall-clock per served batch (appended by SimCacheEngine.serve);
+    # the latency percentiles the streaming driver/bench report
+    batch_latencies_ms: list = dataclasses.field(default_factory=list)
 
     @property
     def hit_rate(self) -> float:
@@ -140,6 +207,46 @@ class ServeStats:
     @property
     def mean_cost(self) -> float:
         return self.total_cost / max(self.n_requests, 1)
+
+    def latency_percentile(self, q: float) -> float:
+        if not self.batch_latencies_ms:
+            return 0.0
+        return float(np.percentile(self.batch_latencies_ms, q))
+
+    @property
+    def p50_ms(self) -> float:
+        return self.latency_percentile(50)
+
+    @property
+    def p95_ms(self) -> float:
+        return self.latency_percentile(95)
+
+    @property
+    def p99_ms(self) -> float:
+        return self.latency_percentile(99)
+
+
+class PlacementBuffer:
+    """The active data plane, versioned: the runtime cache network plus
+    the allocation it was built from. The control plane never mutates a
+    live buffer's network — it builds the next state and the engine
+    swaps it in atomically (one pointer assignment + version bump on the
+    serving thread), so a lookup always runs against a complete,
+    internally consistent placement and ``version`` tells every observer
+    exactly which one."""
+
+    def __init__(self):
+        self.simcache: SimCacheNetwork | None = None
+        self.slots: np.ndarray | None = None
+        self.slot_cache: np.ndarray | None = None
+        self.version: int = 0
+
+    def install(self, simcache: SimCacheNetwork, slots: np.ndarray,
+                slot_cache: np.ndarray) -> None:
+        self.simcache = simcache
+        self.slots = slots
+        self.slot_cache = slot_cache
+        self.version += 1
 
 
 class SimCacheEngine:
@@ -160,7 +267,18 @@ class SimCacheEngine:
         self.duel: DuelPlane | None = None                # online §5 plane
         self.placement_events = 0                         # duel churn count
         self._prefill = jax.jit(model_api.make_prefill(cfg))
-        self.simcache: SimCacheNetwork | None = None
+        self.placement = PlacementBuffer()                # active data plane
+        # background-refresh control: the worker thread solves, the
+        # serving thread swaps; _pending crosses under _refresh_lock
+        self._refresh_lock = threading.Lock()
+        self._refresh_thread: threading.Thread | None = None
+        self._pending: tuple | None = None
+        self._in_flight = False
+        self.refresh_count = 0            # completed installs (sync+async)
+        self.swap_count = 0               # async atomic swaps
+        self.swap_stall_s = 0.0           # total serving-thread swap time
+        self.max_swap_stall_s = 0.0
+        self.last_predicted_cost: float | None = None
         # key-axis shard policy for the sharded data plane: resolved once
         # from the mesh, reused on every placement refresh
         self.mesh = mesh
@@ -170,11 +288,35 @@ class SimCacheEngine:
         if ecfg.sharded and mesh is None:
             raise ValueError("EngineConfig.sharded requires a mesh")
 
+    # -------------------------------------------------- data-plane state
+    @property
+    def simcache(self) -> SimCacheNetwork | None:
+        """The active runtime network (the double buffer's live half)."""
+        return self.placement.simcache
+
+    @property
+    def placement_version(self) -> int:
+        return self.placement.version
+
+    @property
+    def refresh_in_flight(self) -> bool:
+        """True from ``request_refresh`` until the swap lands (the
+        observable refresh-in-flight flag of the streaming loop)."""
+        return self._in_flight
+
     # ------------------------------------------------------- calibration
     def calibrate(self, sample_prompt: jnp.ndarray, n: int = 3) -> float:
         """Measure the repository cost (one prefill batch) in ms and set
         h_model; ICI/DCN levels get fixed fractions (real deployments
-        measure them the same way)."""
+        measure them the same way).
+
+        Rebuilds the topology *and* the active placement buffer: a
+        simcache built before calibration serves the old h costs (its
+        per-key cost offsets, memoized LSH tables and shard layouts all
+        bake the stale values in), so the held allocation is re-installed
+        against the measured costs, and an armed duel plane — priced in
+        the old cost units — is re-armed from the observed window.
+        """
         self._prefill(self.params, {"tokens": sample_prompt})
         t0 = time.perf_counter()
         for _ in range(n):
@@ -187,6 +329,14 @@ class SimCacheEngine:
         self.net = tpu_hierarchy(self.ecfg.k_device, self.ecfg.k_pod,
                                  self.ecfg.k_global, self.ecfg.h_ici,
                                  self.ecfg.h_dcn, self.ecfg.h_model)
+        if self.placement.slots is not None:
+            # re-install the held allocation with the measured costs —
+            # the stale-simcache regression fix (same slots, new h's)
+            self._rebuild_simcache(self.placement.slots,
+                                   self.placement.slot_cache)
+            if self.duel is not None:
+                self._arm_duel(self.observed_instance(),
+                               self.placement.slots)
         return ms
 
     # ----------------------------------------------------- control plane
@@ -211,23 +361,21 @@ class SimCacheEngine:
                       gamma=self.ecfg.gamma)
         return Instance(net=self.net, cat=cat, dem=dem)
 
-    def refresh_placement(self, algo: str | None = None,
-                          device: bool | None = None) -> float:
-        """Re-solve offline placement on the observed demand window;
-        rebuild the runtime cache. Returns the predicted C(A).
+    def _control_shard_args(self):
+        """(mesh, axes) for the control plane, or None — the single
+        resolution point shared by the solver, the duel plane, and the
+        background refresh (LookupShardPolicy.control_plane_args)."""
+        if self.lookup_shards is None:
+            return None
+        return self.lookup_shards.control_plane_args(self.ecfg.sharded)
 
-        ``device=None`` follows ``EngineConfig.device_placement``: the
-        default device path solves on a DeviceInstance via the batched
-        gain oracle (mesh-sharded alongside the data-plane keys when
-        ``sharded``); ``device=False`` forces the NumPy oracles.
-        """
-        algo = algo or self.ecfg.algo
-        if device is None:
-            device = self.ecfg.device_placement
-        inst = self.observed_instance()
+    def _solve(self, inst: Instance, algo: str, device: bool
+               ) -> tuple[np.ndarray, float]:
+        """Run the offline solver on one observed instance; returns the
+        (clamped) allocation and the predicted C(A). Pure function of
+        its inputs — safe to run on the background refresh thread."""
         if device:
-            sh = (self.lookup_shards.gain_shard_args()
-                  if (self.ecfg.sharded and self.lookup_shards) else None)
+            sh = self._control_shard_args()
             dinst = DeviceInstance.from_instance(
                 inst, mesh=sh[0] if sh else None,
                 axes=sh[1] if sh else (), materialize_ca=False)
@@ -246,35 +394,129 @@ class SimCacheEngine:
         else:
             slots = greedy_then_localswap(inst, max_passes=8).slots
         slots = np.where(slots < 0, 0, slots)
-        self._rebuild_simcache(slots, inst.slot_cache)
-        if self.ecfg.netduel:
-            # online §5 plane: duel state lives on device, sharded along
-            # the same axes as the data-plane keys, and persists across
-            # serve() batches (reset on every offline re-solve)
-            sh = (self.lookup_shards.gain_shard_args()
-                  if (self.ecfg.sharded and self.lookup_shards) else None)
-            duel_dinst = DeviceInstance.from_instance(
-                inst, mesh=sh[0] if sh else None,
-                axes=sh[1] if sh else (), materialize_ca=False)
-            self.duel = DuelPlane(
-                duel_dinst, slots, window=self.ecfg.duel_window,
-                delta=self.ecfg.duel_delta,
-                arm_prob=self.ecfg.duel_arm_prob, seed=self.ecfg.duel_seed)
         if device:
             # device evaluator — the only C(A) path that exists past
             # objective.CA_MATERIALIZE_MAX catalogs
-            return dinst.total_cost(slots)
-        return inst.total_cost(slots)
+            pred = dinst.total_cost(slots)
+        else:
+            pred = inst.total_cost(slots)
+        return slots, pred
+
+    def _arm_duel(self, inst: Instance, slots: np.ndarray) -> None:
+        """(Re-)arm the online §5 plane: duel state lives on device,
+        sharded along the same axes as the data-plane keys, and persists
+        across serve() batches (reset on every offline install)."""
+        sh = self._control_shard_args()
+        duel_dinst = DeviceInstance.from_instance(
+            inst, mesh=sh[0] if sh else None,
+            axes=sh[1] if sh else (), materialize_ca=False)
+        self.duel = DuelPlane(
+            duel_dinst, slots, window=self.ecfg.duel_window,
+            delta=self.ecfg.duel_delta,
+            arm_prob=self.ecfg.duel_arm_prob, seed=self.ecfg.duel_seed)
+
+    def _install(self, slots: np.ndarray, inst: Instance) -> None:
+        """Install a solved allocation into the active buffer: rebuild
+        the runtime network, re-arm the duel plane, bump the version.
+        Runs on the serving thread — this *is* the atomic swap."""
+        self._rebuild_simcache(slots, inst.slot_cache)
+        if self.ecfg.netduel:
+            self._arm_duel(inst, slots)
+        self.refresh_count += 1
+
+    def refresh_placement(self, algo: str | None = None,
+                          device: bool | None = None) -> float:
+        """Re-solve offline placement on the observed demand window;
+        rebuild the runtime cache. Returns the predicted C(A).
+
+        ``device=None`` follows ``EngineConfig.device_placement``: the
+        default device path solves on a DeviceInstance via the batched
+        gain oracle (mesh-sharded alongside the data-plane keys when
+        ``sharded``); ``device=False`` forces the NumPy oracles.
+
+        This is the *synchronous* path (solve + install in one call,
+        serving blocked throughout) — the streaming loop uses
+        :meth:`request_refresh` / :meth:`poll_refresh` instead.
+        """
+        algo = algo or self.ecfg.algo
+        if device is None:
+            device = self.ecfg.device_placement
+        inst = self.observed_instance()
+        slots, pred = self._solve(inst, algo, device)
+        self._install(slots, inst)
+        self.last_predicted_cost = pred
+        return pred
+
+    # ------------------------------------------- double-buffered refresh
+    def request_refresh(self, algo: str | None = None,
+                        device: bool | None = None) -> bool:
+        """Start a background placement re-solve against a snapshot of
+        the observed demand; the active buffer keeps serving throughout.
+        Returns False (and does nothing) if a refresh is already in
+        flight. The finished solve is *not* installed here — call
+        :meth:`poll_refresh` from the serving loop to swap it in."""
+        if self._in_flight:
+            return False
+        algo = algo or self.ecfg.algo
+        if device is None:
+            device = self.ecfg.device_placement
+        inst = self.observed_instance()       # snapshot: lam is a copy
+        self._in_flight = True
+
+        def work():
+            try:
+                slots, pred = self._solve(inst, algo, device)
+                with self._refresh_lock:
+                    self._pending = (slots, inst, pred)
+            except BaseException:
+                self._in_flight = False       # never wedge the flag
+                raise
+
+        self._refresh_thread = threading.Thread(
+            target=work, name="placement-refresh", daemon=True)
+        self._refresh_thread.start()
+        return True
+
+    def wait_refresh(self, timeout: float | None = None) -> bool:
+        """Block until the in-flight solve finishes (the *solve*, not the
+        swap — call :meth:`poll_refresh` after). True if nothing is
+        running or the thread completed within ``timeout``."""
+        t = self._refresh_thread
+        if t is None or not t.is_alive():
+            return True
+        t.join(timeout)
+        return not t.is_alive()
+
+    def poll_refresh(self) -> bool:
+        """Install a finished background solve, if any: the atomic swap.
+        The serving thread stalls only for the host-side rebuild + duel
+        re-arm (timed into ``swap_stall_s``/``max_swap_stall_s``), never
+        for the solve. Returns True iff a swap happened."""
+        with self._refresh_lock:
+            pend, self._pending = self._pending, None
+        if pend is None:
+            return False
+        slots, inst, pred = pend
+        t0 = time.perf_counter()
+        self._install(slots, inst)
+        stall = time.perf_counter() - t0
+        self.swap_stall_s += stall
+        self.max_swap_stall_s = max(self.max_swap_stall_s, stall)
+        self.swap_count += 1
+        self.last_predicted_cost = pred
+        self._in_flight = False
+        return True
 
     def _rebuild_simcache(self, slots: np.ndarray,
                           slot_cache: np.ndarray | None = None) -> None:
-        """(Re)build the runtime lookup network from an allocation —
-        shared by the offline refresh and the online duel's promotion
-        churn."""
+        """(Re)build the runtime lookup network from an allocation and
+        install it into the placement buffer (version += 1) — shared by
+        the offline install, the online duel's promotion churn, and the
+        calibration rebuild."""
         if slot_cache is None:
             slot_cache = self.net.slot_layout()
         hs = [0.0, self.ecfg.h_ici, self.ecfg.h_dcn]
-        self.simcache = SimCacheNetwork.from_placement(
+        simcache = SimCacheNetwork.from_placement(
             self.coords, slots, slot_cache, hs, self.ecfg.h_model,
             metric=self.ecfg.metric, gamma=self.ecfg.gamma,
             fused=self.ecfg.fused, sharded=self.ecfg.sharded,
@@ -283,43 +525,71 @@ class SimCacheEngine:
                         if self.lookup_shards else None),
             candidate_policy=(self.lookup_shards.candidate_policy()
                               if self.lookup_shards else None))
+        self.placement.install(simcache, np.asarray(slots), slot_cache)
 
     # --------------------------------------------------------- data plane
     def serve(self, request_ids: np.ndarray, prompts: jnp.ndarray
               ) -> tuple[list, ServeStats]:
         """Serve a batch. request_ids index the catalog (their embeddings
-        are the lookup keys); prompts are the token batch for misses."""
+        are the lookup keys); prompts are the token batch for misses.
+
+        With ``EngineConfig.bucket`` the lookup, the duel observation and
+        the miss-prefill all run at the batch's power-of-two bucket shape
+        (padding masked out of every stat and the duel trajectory), so a
+        stream of mixed batch sizes compiles each entry point once per
+        bucket instead of once per size.
+        """
+        t_batch0 = time.perf_counter()
+        request_ids = np.asarray(request_ids)
+        n = len(request_ids)
         self.counts[request_ids] += 1.0
-        self.stats.n_requests += len(request_ids)
-        out: list = [None] * len(request_ids)
+        self.stats.n_requests += n
+        out: list = [None] * n
+        bucket = self.ecfg.bucket
 
         if self.simcache is None:
-            miss_idx = np.arange(len(request_ids))
+            miss_idx = np.arange(n)
         else:
             q = jnp.asarray(self.coords[request_ids])
+            if bucket:
+                q = _pad_rows(q, bucket_size(n, self.ecfg.min_bucket))
             res = self.simcache.lookup(q, prune=self.ecfg.prune,
                                        verify=self.ecfg.verify)
-            hits = np.asarray(res.hit)
-            payloads = np.asarray(res.payload)
-            self.stats.total_cost += float(np.sum(np.asarray(res.cost)))
+            # slice the valid prefix before any accounting: padded rows
+            # never touch stats, responses, or the demand window
+            hits = np.asarray(res.hit)[:n]
+            payloads = np.asarray(res.payload)[:n]
+            full_cost = np.asarray(res.cost)          # bucket shape
+            self.stats.total_cost += float(np.sum(full_cost[:n]))
             self.stats.total_approx_cost += float(
-                np.sum(np.asarray(res.approx_cost)))
+                np.sum(np.asarray(res.approx_cost)[:n]))
             for i in np.nonzero(hits)[0]:
                 out[i] = self.responses.get(int(payloads[i]))
             self.stats.n_hits += int(hits.sum())
             miss_idx = np.nonzero(~hits)[0]
             if self.duel is not None:
                 # online control plane: observe the batch in one scan
-                # launch, priced by the costs the lookup just computed
-                if self.duel.observe(np.asarray(request_ids),
-                                     b1_ext=np.asarray(res.cost)):
+                # launch, priced by the costs the lookup just computed —
+                # at the bucket shape, padded steps masked to no-ops
+                ids_b = _pad_rows(request_ids, full_cost.shape[0])
+                if self.duel.observe(ids_b, b1_ext=full_cost,
+                                     n_valid=n if bucket else None):
                     self._rebuild_simcache(self.duel.slots_np)
                     self.placement_events += 1
+                    if self.ecfg.refresh_on_promotion:
+                        # duel churn = demand drifted: trigger the
+                        # background offline re-solve (no-op if one is
+                        # already in flight)
+                        self.request_refresh()
 
         if len(miss_idx):
-            # repository: run the model on the miss sub-batch
-            logits, _ = self._prefill(self.params,
-                                      {"tokens": prompts[miss_idx]})
+            # repository: run the model on the miss sub-batch (padded to
+            # its own bucket so the prefill compiles per bucket too)
+            sel = prompts[jnp.asarray(miss_idx)]
+            if bucket:
+                sel = _pad_rows(sel, bucket_size(len(miss_idx),
+                                                 self.ecfg.min_bucket))
+            logits, _ = self._prefill(self.params, {"tokens": sel})
             resp = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
             self.stats.model_calls += 1
             if self.simcache is None:
@@ -328,4 +598,6 @@ class SimCacheEngine:
                 rid = int(request_ids[i])
                 self.responses[rid] = resp[j:j + 1]
                 out[i] = resp[j:j + 1]
+        self.stats.batch_latencies_ms.append(
+            (time.perf_counter() - t_batch0) * 1e3)
         return out, self.stats

@@ -1,0 +1,45 @@
+"""Trace/compile counters for jitted entry points.
+
+A ``bump(name)`` call placed inside a jitted function body is a Python
+side effect: it executes once per *trace* (i.e. once per new cache entry
+— a new static-argument combination or a new input shape/dtype), never
+per call. The counters therefore measure exactly what batch bucketing is
+supposed to bound: how many distinct compiled specializations a serving
+workload forces out of the fused lookup, the duel scan, and the prefill.
+
+Used by the retrace-regression tests (tests/test_streaming.py) and
+benchmarks/serving_bench.py; zero overhead on the executed path.
+"""
+from __future__ import annotations
+
+import collections
+
+COUNTS: collections.Counter = collections.Counter()
+
+
+def bump(name: str) -> None:
+    """Record one trace of ``name`` (call from inside the jitted body)."""
+    COUNTS[name] += 1
+
+
+def get(name: str) -> int:
+    return COUNTS[name]
+
+
+def reset() -> None:
+    COUNTS.clear()
+
+
+class snapshot:
+    """Context manager: ``with snapshot() as s: ...; s.delta("name")``
+    gives traces since entry without resetting the global counters."""
+
+    def __enter__(self) -> "snapshot":
+        self._at_entry = dict(COUNTS)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+    def delta(self, name: str) -> int:
+        return COUNTS[name] - self._at_entry.get(name, 0)

@@ -68,6 +68,36 @@ def test_engine_calibration_sets_cost_units():
     assert eng.ecfg.h_ici < eng.ecfg.h_dcn < eng.ecfg.h_model
 
 
+def test_calibrate_rebuilds_simcache():
+    """Staleness regression: calibrate() used to rebuild the topology but
+    leave the already-built simcache (and an armed duel plane) serving
+    the old h costs. It must re-install the held allocation against the
+    measured costs and re-arm the duel in the new cost units."""
+    eng, cfg, cat = make_engine(algo="greedy")
+    eng.ecfg.netduel = True
+    eng.ecfg.duel_window = 64
+    serve_trace(eng, cfg, cat, n_batches=4)
+    eng.refresh_placement()
+    assert eng.duel is not None
+    keys_before = [np.asarray(lv.keys).copy() for lv in eng.simcache.levels]
+    v0 = eng.placement.version
+    duel_before = eng.duel
+    ms = eng.calibrate(jnp.zeros((4, 8), jnp.int32))
+    # runtime network now prices the calibrated costs, not the stale ones
+    assert [lv.h for lv in eng.simcache.levels] == \
+        [0.0, eng.ecfg.h_ici, eng.ecfg.h_dcn]
+    assert eng.simcache.h_repo == eng.ecfg.h_model == ms
+    assert eng.placement.version > v0
+    # same allocation, new prices: the stored keys are unchanged
+    for a, lv in zip(keys_before, eng.simcache.levels):
+        np.testing.assert_array_equal(a, np.asarray(lv.keys))
+    # the duel plane was re-armed (old one was priced in stale units)
+    assert eng.duel is not duel_before and eng.duel.t == 0
+    # and serving still works end to end in the new units
+    stats = serve_trace(eng, cfg, cat, n_batches=4, seed=7)
+    assert stats.n_requests == 8 * 16
+
+
 def test_engine_sharded_data_plane_matches_fused():
     """EngineConfig.sharded + a mesh routes lookups through the
     mesh-sharded fused path; served stats must match the single-device

@@ -24,6 +24,8 @@ import numpy as np
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
                       "netduel_trace.json")
+GOLDEN_STREAM = os.path.join(os.path.dirname(__file__), "golden",
+                             "streaming_trace.json")
 
 
 def _build_engine():
@@ -84,6 +86,45 @@ def _replay():
     }
 
 
+def _replay_streaming():
+    """The streaming trace: three Poisson streams multiplexed through
+    the bucketed StreamDriver path, a mid-stream background refresh
+    swapped in atomically at a fixed batch boundary, then a second
+    serving phase on the new placement. Batch sizes are set by the
+    virtual clock and the swap point is pinned (request → wait → poll),
+    so the whole trajectory — including which batches the duel promotes
+    on — is deterministic and golden-able."""
+    from repro.core import demand as demand_api
+    from repro.serve import StreamDriver, StreamSpec
+
+    eng, cfg, cat = _build_engine()
+    streams = [
+        StreamSpec(demand=demand_api.zipf(cat, alpha=1.1, seed=s + 1),
+                   rate=[5.0, 9.0, 2.0][s], seed=s + 1, name=f"user{s}")
+        for s in range(3)]
+    drv = StreamDriver(eng, streams, max_batch=48, batch_window=2.0)
+    st_cold = drv.run(64)
+    eng.refresh_placement()                    # arms the duel plane
+    st1 = drv.run(160)
+    # the mid-stream swap, at a deterministic batch boundary
+    assert eng.request_refresh()
+    assert eng.wait_refresh(timeout=300)
+    assert eng.poll_refresh()
+    st2 = drv.run(160)
+    return {
+        "batch_sizes": st_cold.batch_sizes + st1.batch_sizes
+        + st2.batch_sizes,
+        "n_hits": eng.stats.n_hits,
+        "model_calls": eng.stats.model_calls,
+        "total_cost": eng.stats.total_cost,
+        "placement_events": eng.placement_events,
+        "placement_version": eng.placement.version,
+        "n_promotions": eng.duel.n_promotions,
+        "final_duel_slots": [int(s) for s in eng.duel.slots_np],
+        "duel_served_cost": eng.duel.served_cost,
+    }
+
+
 def test_netduel_trace_replay_matches_golden():
     with open(GOLDEN) as f:
         golden = json.load(f)
@@ -101,11 +142,33 @@ def test_netduel_trace_replay_matches_golden():
                                golden["duel_served_cost"], rtol=1e-5)
 
 
+def test_streaming_trace_replay_matches_golden():
+    """The streaming engine (bucketed batches + double-buffered swap)
+    replays its golden bit-for-bit: batch forming, serving accounting,
+    duel churn, and the post-swap placement are all pinned."""
+    with open(GOLDEN_STREAM) as f:
+        golden = json.load(f)
+    got = _replay_streaming()
+    assert got["batch_sizes"] == golden["batch_sizes"]
+    assert got["n_hits"] == golden["n_hits"]
+    assert got["model_calls"] == golden["model_calls"]
+    assert got["placement_events"] == golden["placement_events"]
+    assert got["placement_version"] == golden["placement_version"]
+    assert got["n_promotions"] == golden["n_promotions"]
+    assert got["final_duel_slots"] == golden["final_duel_slots"]
+    np.testing.assert_allclose(got["total_cost"], golden["total_cost"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(got["duel_served_cost"],
+                               golden["duel_served_cost"], rtol=1e-5)
+
+
 if __name__ == "__main__":
     if "--write" in sys.argv:
         os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
-        with open(GOLDEN, "w") as f:
-            json.dump(_replay(), f, indent=1)
-        print(f"wrote {GOLDEN}")
+        for path, fn in ((GOLDEN, _replay),
+                         (GOLDEN_STREAM, _replay_streaming)):
+            with open(path, "w") as f:
+                json.dump(fn(), f, indent=1)
+            print(f"wrote {path}")
     else:
         print(__doc__)
