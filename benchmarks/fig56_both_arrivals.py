@@ -3,7 +3,9 @@
 Fig 5: LOCALSWAP parent allocation under Gaussian and Uniform traffic —
 the parent now covers the center of the domain too (the Prop 4.2
 threshold structure is lost); we record the parent's coverage of the
-central region as the quantitative check.
+central region as the quantitative check. The warm-start pipeline's
+eq (14)–(15) tandem-both reduction (core.placement.warmstart) is run
+alongside it: its density map must reproduce the same center coverage.
 
 Fig 6: uniform λ, total cost vs h for γ ∈ {0.5, 1, 2}: LOCALSWAP
 (points) vs the shifted-tessellation continuous approximation (curves;
@@ -16,6 +18,7 @@ import numpy as np
 from benchmarks.common import (csv_line, save_json, tandem_both_instance,
                                timed)
 from repro.core.placement import continuous as cont
+from repro.core.placement import warmstart as ws
 from repro.core.placement import localswap
 
 
@@ -49,13 +52,23 @@ def run(L: int = 40, k: int = 40, h_repo: float = 200.0,
         ls, tl = timed(lambda: localswap(inst, n_iters=ls_iters, seed=0))
         cov = _parent_center_coverage(inst, ls.slots)
         parent_pts = inst.cat.coords[ls.slots[inst.slot_cache == 1]]
+        red = ws.classify_topology(inst.net, gamma=inst.cat.gamma)
+        rep, tw = timed(lambda: ws.warm_start(inst, reduction=red,
+                                              polish_iters=256,
+                                              device=False))
+        cov_ws = _parent_center_coverage(inst, rep.slots)
         out["fig5"][name] = {
             "cost": ls.cost(inst),
             "parent_center_coverage": cov,
             "parent_points": parent_pts.tolist(),
+            "warmstart_cost": inst.total_cost(rep.slots),
+            "warmstart_parent_center_coverage": cov_ws,
         }
         csv_line(f"fig5/{name}/localswap", tl * 1e6,
                  f"cost={ls.cost(inst):.4f};center_cov={cov:.3f}")
+        csv_line(f"fig5/{name}/warmstart", tw * 1e6,
+                 f"cost={out['fig5'][name]['warmstart_cost']:.4f};"
+                 f"center_cov={cov_ws:.3f}")
 
     # ---- Fig 6: cost vs h per gamma, uniform traffic ----
     area = float(L * L)
@@ -83,6 +96,9 @@ def run(L: int = 40, k: int = 40, h_repo: float = 200.0,
     out["checks"] = {
         "parent covers center (uniform)":
             out["fig5"]["uniform"]["parent_center_coverage"] > 0.10,
+        "warmstart parent covers center (uniform)":
+            out["fig5"]["uniform"]["warmstart_parent_center_coverage"]
+            > 0.10,
         "continuous tracks localswap (gamma=1)": rel < 0.25,
     }
     out["fig6_relgap_gamma1"] = rel

@@ -1,0 +1,195 @@
+"""Warm-start pipeline benchmark: §4 continuous-limit placement at scale.
+
+Measures, per topology class (3-cache chain, leaf-fed tandem, equi-depth
+tree — all grid catalogs with Gaussian demand, the paper's §6.1 regime)
+and catalog size O:
+
+* the warm-start pipeline stages (classify+solve, band map, LOCALSWAP
+  polish) — cold wall clock (compiles included) and steady-state;
+* device-GREEDY steady-state at every O where it still runs
+  (``GREEDY_MAX``), plus the measured optimality gap
+  (C_warm − C_greedy)/C_greedy of warm-start+polish against it;
+* at the FULL scale (``WARMSTART_BENCH_FULL=1`` / ``CI_FULL=1`` via
+  scripts/ci.sh): the 10⁶-object run, where no discrete solver can run
+  — the gain table alone would be O(O·J) per pass over streamed O(O²)
+  distance tiles. The committed headline compares the full pipeline at
+  10⁶ against device-GREEDY at its feasibility frontier (the largest
+  benched O where it completes): the warm start must be ≥ 10× faster
+  *while solving a 100× larger instance* (asserted in-bench, recorded
+  in results/bench/warmstart.json).
+
+Gap bounds asserted here mirror tests/test_warmstart.py's recorded
+bounds — the bench is where they were measured.
+
+  PYTHONPATH=src:. python benchmarks/warmstart_bench.py [--smoke]
+  WARMSTART_BENCH_FULL=1 PYTHONPATH=src:. python benchmarks/warmstart_bench.py
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import os
+
+import numpy as np
+
+from benchmarks.common import csv_line, save_json, timed
+from repro.core import catalog, demand, topology
+from repro.core.objective import DeviceInstance, Instance
+from repro.core.placement import warmstart as ws
+from repro.core.placement.device import device_greedy, device_localswap
+
+FULL = bool(os.environ.get("WARMSTART_BENCH_FULL"))
+
+GREEDY_MAX = 10_000      # feasibility frontier: largest benched O where
+#                          device-GREEDY completes in-budget (past it,
+#                          each of its O(K) picks pays a full streamed
+#                          gain pass — hours at 10⁶)
+GAP_BOUND = 0.06         # measured-gap ceiling vs device-GREEDY, all
+#                          topology classes, O ∈ {10³, 10⁴} (observed:
+#                          warm+polish is typically *better* on grids)
+MIN_FRONTIER_SPEEDUP = 10.0
+
+
+def make_instance(topo: str, O: int, k: int = 64) -> Instance:
+    """Grid catalog + Gaussian demand on one of the three §4 topology
+    classes; O must be a perfect square (grid side L = √O)."""
+    L = math.isqrt(O)
+    assert L * L == O, f"O={O} not a perfect square"
+    cat = catalog.grid(L=L)
+    if topo == "tandem":
+        net = topology.tandem(k_leaf=k, k_parent=k, h=2.0, h_repo=100.0)
+        dem = demand.gaussian_grid(cat, sigma=L / 4)
+    elif topo == "chain":
+        net = topology.chain(3, [k, k, k], [0.0, 2.0, 6.0], 100.0)
+        dem = demand.gaussian_grid(cat, sigma=L / 4)
+    elif topo == "tree":
+        net = topology.equi_depth_tree(branching=2, depth=1,
+                                       k_per_level=[k, k],
+                                       h_per_level=[0.0, 3.0],
+                                       h_repo=100.0)
+        dem = demand.gaussian_grid(cat, sigma=L / 4, n_ingress=2)
+    else:
+        raise ValueError(topo)
+    return Instance(net=net, cat=cat, dem=dem)
+
+
+def bench_point(topo: str, O: int, polish: int, k: int = 64) -> dict:
+    """One (topology, O) measurement row."""
+    inst = make_instance(topo, O, k=k)
+    dinst = DeviceInstance.from_instance(inst)
+    row = {"name": f"{topo}/O{O}", "topo": topo, "O": O, "k": k,
+           "total_slots": int(inst.net.total_slots),
+           "polish_iters": polish,
+           "streamed_ca": bool(dinst.ca is None)}
+
+    rep, cold = timed(ws.warm_start, inst, dinst=dinst,
+                      polish_iters=polish)
+    rep2, steady = timed(ws.warm_start, inst, dinst=dinst,
+                         polish_iters=polish)
+    assert np.array_equal(rep.slots, rep2.slots), "warm start nondeterministic"
+    row.update(warm_cold_s=cold, warm_s=steady,
+               solve_s=rep2.solve_s, map_s=rep2.map_s,
+               polish_s=rep2.polish_s, n_swaps=rep2.n_swaps,
+               cont_cost=rep2.cont_cost, kind=rep2.kind)
+
+    # cost accounting: exact host f64 where C_a fits, streamed device
+    # evaluator otherwise (the only path that exists at 10⁶)
+    cost_of = inst.total_cost if dinst.ca is not None else dinst.total_cost
+    row["warm_cost"] = float(cost_of(rep2.slots))
+    row["warm_cost_premap"] = float(cost_of(rep2.slots_warm))
+
+    if O <= GREEDY_MAX:
+        device_greedy(dinst)                      # compile
+        g, tg = timed(device_greedy, dinst)
+        g = np.where(g < 0, 0, g)
+        row["greedy_s"] = tg
+        row["greedy_cost"] = float(cost_of(g))
+        row["gap"] = (row["warm_cost"] - row["greedy_cost"]) \
+            / row["greedy_cost"]
+        row["speedup_matched"] = tg / steady
+        assert row["gap"] <= GAP_BOUND, \
+            f"{row['name']}: warm-start gap {row['gap']:.3%} exceeds " \
+            f"{GAP_BOUND:.0%}"
+    csv_line(f"warmstart/{row['name']}", steady * 1e6,
+             f"gap={row.get('gap', float('nan')):.4f};"
+             f"solve={rep2.solve_s:.3f}s;polish={rep2.polish_s:.3f}s")
+    return row
+
+
+def polish_sweep(O: int = 10_000, topo: str = "tandem") -> list[dict]:
+    """Gap vs polish-window size at the frontier O — how much discrete
+    cleanup the analytic map still needs (shrinks as O grows: the band
+    map converges to the continuum optimum)."""
+    inst = make_instance(topo, O)
+    dinst = DeviceInstance.from_instance(inst)
+    g = device_greedy(dinst)
+    cg = inst.total_cost(np.where(g < 0, 0, g))
+    rows = []
+    for w in (0, 128, 512):
+        rep, _ = timed(ws.warm_start, inst, dinst=dinst, polish_iters=w)
+        rows.append({"name": f"polish_sweep/{topo}/O{O}/W{w}",
+                     "W": w, "warm_s": rep.total_s,
+                     "gap": (inst.total_cost(rep.slots) - cg) / cg})
+        csv_line(rows[-1]["name"], rep.total_s * 1e6,
+                 f"gap={rows[-1]['gap']:.4f}")
+    return rows
+
+
+def run(smoke: bool = False, full: bool = FULL) -> dict:
+    out: dict = {"rows": [], "polish_sweep": [],
+                 "greedy_max_O": GREEDY_MAX, "gap_bound": GAP_BOUND}
+    sizes = [1024] if smoke else [1024, 10_000]
+    polish = {1024: 128, 10_000: 512}
+    for topo in ("tandem", "chain", "tree"):
+        for O in sizes:
+            out["rows"].append(bench_point(topo, O, polish[O]))
+    if not smoke:
+        out["polish_sweep"] = polish_sweep()
+
+    if full:
+        # 10⁶ objects: device-GREEDY cannot run (frontier is GREEDY_MAX);
+        # the headline pipeline is the pure analytic placement (polish
+        # W=0 — at 10⁶ the bands are ~10⁵ objects wide and the
+        # discretization error the polish removes has vanished; the
+        # polish-sweep rows above quantify that trend), plus an
+        # informational small-window polish run recording what an O(K)
+        # discrete cleanup costs at this scale.
+        O_full = 1_000_000
+        head = bench_point("tandem", O_full, polish=0)
+        out["rows"].append(head)
+        out["rows"].append(bench_point("tandem", O_full, polish=16))
+        frontier = next(r for r in out["rows"]
+                        if r["O"] == GREEDY_MAX and r["topo"] == "tandem")
+        speedup = frontier["greedy_s"] / head["warm_s"]
+        out["headline"] = {
+            "what": "warm-start pipeline (solve+map+polish) at O=10⁶ vs "
+                    "device-GREEDY at its feasibility frontier "
+                    f"O={GREEDY_MAX} — the largest benched size where "
+                    "GREEDY completes; the warm start solves a "
+                    f"{O_full // GREEDY_MAX}× larger instance",
+            "warm_1e6_s": head["warm_s"],
+            "greedy_frontier_s": frontier["greedy_s"],
+            "greedy_frontier_O": GREEDY_MAX,
+            "speedup_vs_frontier": speedup,
+            "greedy_1e6_projection_s":
+                frontier["greedy_s"] * (O_full / GREEDY_MAX),
+            "projection_note": "linear per-object extrapolation — a "
+                               "lower bound; streamed C_a makes GREEDY "
+                               "superlinear past CA_MATERIALIZE_MAX",
+        }
+        csv_line("warmstart/headline", head["warm_s"] * 1e6,
+                 f"speedup_vs_frontier={speedup:.1f}x")
+        assert speedup >= MIN_FRONTIER_SPEEDUP, \
+            f"warm@1e6 only {speedup:.1f}x faster than greedy@frontier"
+
+    save_json("warmstart.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="O=1024 rows only (the scripts/ci.sh gate)")
+    args = ap.parse_args()
+    r = run(smoke=args.smoke)
+    print(f"{len(r['rows'])} rows -> results/bench/warmstart.json")

@@ -32,13 +32,19 @@
 # candidate/request-axis sharding (sharded_placement_gains +
 # sharded_best_two). The trace-replay golden test
 # (tests/test_trace_replay.py, EngineConfig.netduel end-to-end) and the
-# control-plane property tests ride the same passes. The nightly
-# CI_FULL pass additionally (i) opens the env gate of the 10⁵-object
-# NETDUEL window (tests/test_netduel_device.py::
-# test_netduel_large_window_smoke — slow-marked, device-only: no host
-# C_a can exist at that size) and (ii) runs the placement benchmark
-# with PLACEMENT_BENCH_FULL open: the 10⁵-candidate gain-oracle row
-# and the 10⁵ device-only NETDUEL window row.
+# control-plane property tests ride the same passes. The warm-start
+# gap suite (tests/test_warmstart.py — measured optimality gaps of the
+# §4 continuous-limit pipeline vs device-GREEDY) rides them too, plus a
+# smoke row of its bench below. The nightly CI_FULL pass additionally
+# (i) opens the env gate of the 10⁵-object NETDUEL window
+# (tests/test_netduel_device.py::test_netduel_large_window_smoke —
+# slow-marked, device-only: no host C_a can exist at that size) and the
+# 10⁶-object warm-start run (tests/test_warmstart.py::
+# test_warmstart_1e6_objects), and (ii) runs the placement and
+# warm-start benchmarks with their FULL gates open: the 10⁵-candidate
+# gain-oracle row, the 10⁵ device-only NETDUEL window row, and the
+# 10⁶-object warm-start headline (≥10× faster than device-GREEDY at
+# its feasibility frontier, asserted in-bench).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -53,10 +59,17 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 # and the swap-stall bound are asserted inside the bench itself
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/serving_bench.py --smoke
+# warm-start smoke: O=1024 gap rows vs device-GREEDY, all three
+# topology classes — the gap bound is asserted inside the bench
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/warmstart_bench.py --smoke
 if [[ "${CI_FULL:-0}" == "1" ]]; then
     PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" PLACEMENT_BENCH_FULL=1 \
         python benchmarks/placement_bench.py
     # nightly serving sweep: more distinct sizes, longer driver runs
     PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" SERVING_BENCH_FULL=1 \
         python benchmarks/serving_bench.py
+    # 10⁶-object warm-start headline (speedup-vs-frontier asserted)
+    PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" WARMSTART_BENCH_FULL=1 \
+        python benchmarks/warmstart_bench.py
 fi

@@ -21,7 +21,11 @@ The repo splits eq. (4)'s machinery in two:
     ``serve.engine.refresh_placement`` takes by default.
 
 ``netduel`` (§5) is the online λ-unaware policy; ``continuous`` the
-§4 continuous-relaxation analysis.
+§4 continuous-relaxation analysis; ``warmstart`` turns that analysis
+into the near-O(O) production path (classify the topology, solve the
+continuous program in milliseconds, band-map per Prop 4.2, polish with
+a bounded device-LOCALSWAP window) — the route past 10⁶-object
+catalogs where the O(O·J) discrete solvers cannot run.
 """
 from repro.core.placement.greedy import greedy
 from repro.core.placement.localswap import localswap, localswap_polish
@@ -33,6 +37,9 @@ from repro.core.placement.device import (device_greedy,
                                          device_localswap,
                                          device_localswap_polish)
 from repro.core.placement import continuous
+from repro.core.placement import warmstart
+from repro.core.placement.warmstart import (WarmStartReport,
+                                            classify_topology, warm_start)
 
 __all__ = [
     "greedy", "localswap", "localswap_polish", "netduel",
@@ -40,4 +47,5 @@ __all__ = [
     "greedy_then_localswap", "continuous", "device_greedy",
     "device_localswap", "device_localswap_polish",
     "device_greedy_then_localswap",
+    "warmstart", "warm_start", "classify_topology", "WarmStartReport",
 ]

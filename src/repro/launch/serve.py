@@ -79,6 +79,12 @@ def main() -> None:
                     help="background re-solve cadence, in batches")
     ap.add_argument("--netduel", action="store_true",
                     help="§5 online duels; churn triggers refreshes too")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="§4 continuous-limit warm start on every "
+                         "refresh (analytic solve + Prop 4.2 band map + "
+                         "bounded polish instead of the O(O·J) solver)")
+    ap.add_argument("--warm-polish-iters", type=int, default=512,
+                    help="LOCALSWAP polish window after the warm start")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -88,7 +94,9 @@ def main() -> None:
     cat = catalog_api.embedding_catalog(n=1000, dim=32, seed=0)
     dem = demand_api.zipf(cat, alpha=1.0, seed=1)
     ecfg = EngineConfig(algo=args.algo, netduel=args.netduel,
-                        refresh_on_promotion=args.netduel)
+                        refresh_on_promotion=args.netduel,
+                        warm_start=args.warm_start,
+                        warm_polish_iters=args.warm_polish_iters)
     eng = SimCacheEngine(cfg, params, ecfg, cat.coords)
     eng.calibrate(jnp.zeros((args.batch, 16), jnp.int32))
 

@@ -130,7 +130,8 @@ from repro.core.objective import DeviceInstance, Instance
 from repro.core.placement import (DuelPlane, device_greedy,
                                   device_greedy_then_localswap,
                                   device_localswap, greedy,
-                                  greedy_then_localswap, localswap)
+                                  greedy_then_localswap, localswap,
+                                  warmstart)
 from repro.core.simcache import SimCacheNetwork
 from repro.core.topology import tpu_hierarchy
 from repro.launch.sharding import LookupShardPolicy
@@ -187,6 +188,14 @@ class EngineConfig:
     bucket: bool = True           # power-of-two batch bucketing
     min_bucket: int = 8           # smallest bucket (tiny batches coalesce)
     refresh_on_promotion: bool = False  # duel churn → background re-solve
+    warm_start: bool = False      # §4 continuous-limit warm start: solve
+    #                               the topology's continuous program,
+    #                               band-map (Prop 4.2), polish — replaces
+    #                               the O(O·J) discrete solve on every
+    #                               refresh when the topology reduces
+    warm_polish_iters: int = 512  # LOCALSWAP polish window after the
+    #                               analytic warm start (O(1) in catalog
+    #                               size; 0 = pure analytic placement)
 
 
 @dataclasses.dataclass
@@ -369,16 +378,48 @@ class SimCacheEngine:
             return None
         return self.lookup_shards.control_plane_args(self.ecfg.sharded)
 
-    def _solve(self, inst: Instance, algo: str, device: bool
-               ) -> tuple[np.ndarray, float]:
+    def _solve(self, inst: Instance, algo: str, device: bool,
+               shard: bool = True) -> tuple[np.ndarray, float]:
         """Run the offline solver on one observed instance; returns the
         (clamped) allocation and the predicted C(A). Pure function of
-        its inputs — safe to run on the background refresh thread."""
+        its inputs — safe to run on the background refresh thread.
+
+        ``shard=False`` solves on a single device even when the engine
+        is mesh-sharded. The background refresh thread must use it: two
+        threads enqueueing *collective* programs concurrently (the
+        sharded control-plane solve racing the serving thread's sharded
+        lookups) have no cross-program per-device launch-order
+        guarantee, so their device executions can interleave and
+        deadlock the client's collective rendezvous. The control-plane
+        oracles are bit-identical at any shard count (locked by
+        tests/test_device_placement.py), so the unsharded background
+        solve returns the same allocation the sharded one would — the
+        atomic-swap differentials in tests/test_streaming.py assert
+        exactly that against a sharded synchronous solve.
+
+        With ``EngineConfig.warm_start`` on and a topology that reduces
+        to a §4 continuous program (the engine's tpu_hierarchy chain
+        always does), the discrete solver is replaced by the
+        continuous-limit pipeline of placement/warmstart.py: solve the
+        program analytically, band-map per Prop 4.2, polish with a
+        bounded LOCALSWAP window — deterministic, so background
+        refreshes stay replayable. Irreducible topologies fall back to
+        ``algo`` untouched."""
+        warm_red = warmstart.classify_topology(inst.net,
+                                               gamma=inst.cat.gamma) \
+            if self.ecfg.warm_start else None
         if device:
-            sh = self._control_shard_args()
+            sh = self._control_shard_args() if shard else None
             dinst = DeviceInstance.from_instance(
                 inst, mesh=sh[0] if sh else None,
                 axes=sh[1] if sh else (), materialize_ca=False)
+        if warm_red is not None:
+            slots = warmstart.warm_start(
+                inst, reduction=warm_red, device=device,
+                dinst=dinst if device else None,
+                polish_iters=self.ecfg.warm_polish_iters,
+                tol=self.ecfg.swap_tol).slots
+        elif device:
             if algo == "greedy":
                 slots = device_greedy(dinst)
             elif algo == "localswap":
@@ -465,7 +506,9 @@ class SimCacheEngine:
 
         def work():
             try:
-                slots, pred = self._solve(inst, algo, device)
+                # unsharded: a collective solve here would race the
+                # serving thread's collectives (see _solve's docstring)
+                slots, pred = self._solve(inst, algo, device, shard=False)
                 with self._refresh_lock:
                     self._pending = (slots, inst, pred)
             except BaseException:

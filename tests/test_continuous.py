@@ -53,6 +53,51 @@ def test_chain_md_matches_threshold_structure(seed, gamma):
     assert c_th <= c_md + 1e-5 * max(1.0, c_th)
 
 
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), alpha=st.sampled_from([0.6, 1.0, 1.3]),
+       gamma=st.sampled_from([0.5, 1.0, 2.0]))
+def test_chain_md_matches_thresholds_on_zipf(seed, alpha, gamma):
+    """Random Zipf instances (the warm-start pipeline's demand family):
+    mirror descent on (11) and the Prop 4.2 threshold solver find the
+    same optimum — the structural solver is not specialized to smooth
+    λ."""
+    rng = np.random.default_rng(seed)
+    M = int(rng.integers(30, 120))
+    lams = 1.0 / (np.arange(1, M + 1) ** alpha)
+    rng.shuffle(lams)
+    ks = tuple(float(k) for k in rng.integers(5, M, 2))
+    spec = C.ChainSpec(ks=ks, hs=(0.0, float(rng.uniform(0.2, 3.0))),
+                       h_repo=float(rng.uniform(4.0, 20.0)), gamma=gamma)
+    _, c_md = C.solve_chain(lams, spec, iters=6000)
+    _, c_th, _ = C.solve_chain_thresholds(lams, spec)
+    assert c_md == pytest.approx(c_th, rel=3e-2)
+    assert c_th <= c_md + 1e-5 * max(1.0, c_th)
+
+
+def test_solve_chain_bit_deterministic():
+    """Fixed iters/lr ⇒ bit-reproducible across calls AND across a jit
+    cache flush (fresh compile) — the property that keeps warm-started
+    background refreshes replayable by the trace-replay goldens."""
+    import jax
+    rng = np.random.default_rng(2)
+    lams = rng.gamma(2.0, 1.0, 50)
+    spec = C.ChainSpec(ks=(20.0, 35.0), hs=(0.0, 1.2), h_repo=7.0,
+                       gamma=1.0)
+    w1, c1 = C.solve_chain(lams, spec, iters=800)
+    w2, c2 = C.solve_chain(lams, spec, iters=800)
+    np.testing.assert_array_equal(w1, w2)
+    assert c1 == c2
+    jax.clear_caches()                    # force a recompile
+    w3, c3 = C.solve_chain(lams, spec, iters=800)
+    np.testing.assert_array_equal(w1, w3)
+    assert c1 == c3
+    # thresholds path is pure NumPy — same pin, trivially
+    s1 = C.solve_chain_thresholds(lams, spec)
+    s2 = C.solve_chain_thresholds(lams, spec)
+    np.testing.assert_array_equal(s1[0], s2[0])
+    assert s1[1] == s2[1]
+
+
 def test_prop42_threshold_monotonicity():
     """The optimal w from mirror descent respects Prop 4.2/4.3: the
     minimum λ served (mostly) by cache j dominates the maximum λ served
@@ -103,6 +148,70 @@ def test_eq15_gradient_matches_autodiff(seed):
     # f32 autodiff vs f64 hand formula: tolerance at f32 level
     np.testing.assert_allclose(np.asarray(g_auto), g_hand, rtol=3e-3,
                                atol=3e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), gamma=st.sampled_from([0.5, 1.0, 2.0]),
+       beta=st.sampled_from([0.0, 0.3, 2.0]))
+def test_eq15_gradient_matches_autodiff_random_params(seed, gamma, beta):
+    """The hand-coded (15) gradient tracks JAX autodiff of (14) across
+    the full parameter family (γ, β, k₁, k₂, h drawn at random), not
+    just the fixed point of the basic cross-check."""
+    rng = np.random.default_rng(seed)
+    M = int(rng.integers(8, 40))
+    lams = rng.gamma(2.0, 1.0, M)
+    w1 = rng.uniform(0.05, 0.95, M)
+    k1, k2 = rng.uniform(5.0, 40.0, 2)
+    h = float(rng.uniform(0.05, 2.0))
+    g_auto = jax.grad(C.tandem_both_cost)(
+        jnp.asarray(w1), jnp.asarray(lams), float(k1), float(k2), h,
+        float(beta), float(gamma))
+    g_hand = C.tandem_both_grad(w1, lams, float(k1), float(k2), h,
+                                float(beta), float(gamma))
+    scale = np.max(np.abs(g_hand)) + 1e-12
+    np.testing.assert_allclose(np.asarray(g_auto) / scale, g_hand / scale,
+                               rtol=3e-3, atol=3e-4)
+
+
+# ------------------------------------------------------- thresholds_to_w
+def _w_invariants(lams, splits, n_caches):
+    order = np.argsort(-lams, kind="stable")
+    w = C.thresholds_to_w(lams, splits, order, n_caches)
+    M = len(lams)
+    # rows: each region fully assigned (partition of unity)
+    np.testing.assert_allclose(w.sum(axis=1), np.ones(M), atol=1e-12)
+    assert np.all(w >= 0.0)
+    # columns: each cache's mass equals its band width
+    pos = np.concatenate([[0.0], np.asarray(splits, float), [float(M)]])
+    pos = np.maximum.accumulate(np.clip(pos, 0.0, float(M)))
+    np.testing.assert_allclose(w.sum(axis=0), np.diff(pos), atol=1e-12)
+    return w
+
+
+def test_thresholds_to_w_duplicate_lambda_ties():
+    """All-equal λ: the stable sort fixes an arbitrary but deterministic
+    order; the w matrix must still be an exact partition with per-band
+    masses equal to the band widths."""
+    lams = np.ones(10)
+    w = _w_invariants(lams, np.array([2.5, 7.0]), 2)
+    assert w.shape == (10, 3)
+
+
+def test_thresholds_to_w_single_region():
+    """M=1: one region split across caches by fractional shares."""
+    w = _w_invariants(np.array([3.0]), np.array([0.25, 0.75]), 2)
+    np.testing.assert_allclose(w[0], [0.25, 0.5, 0.25])
+
+
+def test_thresholds_to_w_capacity_exceeds_catalog():
+    """k beyond the catalog mass pushes the unconstrained split past M;
+    the sanitized splits must clip, keep w a partition, and leave the
+    repository band empty (everything cached)."""
+    lams = np.array([5.0, 3.0, 2.0, 1.0])
+    w = _w_invariants(lams, np.array([2.0, 9.0]), 2)
+    assert w[:, 2].sum() == pytest.approx(0.0)    # nothing reaches repo
+    # non-monotone splits are made nondecreasing, not an error
+    _w_invariants(lams, np.array([3.0, 1.0]), 2)
 
 
 def test_tandem_both_beta0_recovers_leaf_only_regime():

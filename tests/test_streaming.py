@@ -148,17 +148,20 @@ def test_unbucketed_retraces_per_batch_size():
 # ===================================================================
 # double-buffered placement: the atomic swap
 # ===================================================================
-def _swap_differential(sharded=False, mesh=None):
+def _swap_differential(sharded=False, mesh=None, **ecfg_kw):
     """Serve a stream across a mid-stream background refresh + atomic
     swap (run A); then replay the same requests against the pre- and
     post-swap placements explicitly (run B: synchronous solve installed
     at the same batch boundary; the solve itself must match A's
-    background solve bit-for-bit). Accounting must agree exactly."""
+    background solve bit-for-bit). Accounting must agree exactly.
+    ``ecfg_kw`` forwards EngineConfig overrides to all three runs (the
+    warm-start variants below swap the solver for the §4 continuous
+    pipeline — the differential contract is solver-independent)."""
     sizes = [16, 9, 16, 23, 16, 11, 16, 16, 7, 16]
     swap_after = 5                       # solve after batch 4, swap at 5
 
     # ---- run A: streamed, background solve, atomic swap
-    eng_a, cfg, cat = make_engine(sharded=sharded, mesh=mesh)
+    eng_a, cfg, cat = make_engine(sharded=sharded, mesh=mesh, **ecfg_kw)
     batches = mixed_batches(cat, cfg, [16] * 4 + sizes)
     for ids, prompts in batches[:4]:
         eng_a.serve(ids, prompts)
@@ -182,7 +185,7 @@ def _swap_differential(sharded=False, mesh=None):
     slots_post = np.asarray(eng_a.placement.slots).copy()
 
     # ---- run B: same trace, *synchronous* solve at the same boundary
-    eng_b, _, _ = make_engine(sharded=sharded, mesh=mesh)
+    eng_b, _, _ = make_engine(sharded=sharded, mesh=mesh, **ecfg_kw)
     for ids, prompts in batches[:4]:
         eng_b.serve(ids, prompts)
     eng_b.refresh_placement()
@@ -205,7 +208,7 @@ def _swap_differential(sharded=False, mesh=None):
 
     # ---- run C: explicit replay against the captured post-swap
     # placement (no solver at all — the placement is installed verbatim)
-    eng_c, _, _ = make_engine(sharded=sharded, mesh=mesh)
+    eng_c, _, _ = make_engine(sharded=sharded, mesh=mesh, **ecfg_kw)
     for ids, prompts in batches[:4]:
         eng_c.serve(ids, prompts)
     eng_c.refresh_placement()
@@ -225,6 +228,23 @@ def test_atomic_swap_differential():
 def test_atomic_swap_differential_8way():
     mesh = jax.make_mesh((8,), ("data",))
     _swap_differential(sharded=True, mesh=mesh)
+
+
+def test_atomic_swap_differential_warmstart():
+    """Warm-started background refresh (EngineConfig.warm_start: the §4
+    analytic solve + Prop 4.2 band map + bounded polish) swapped in by
+    poll_refresh is serving-equivalent to the synchronous warm-start
+    solve at the same batch boundary — the warm path is deterministic,
+    so the whole mid-swap differential holds bit-for-bit."""
+    _swap_differential(warm_start=True, warm_polish_iters=128)
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (ci.sh pass 2)")
+def test_atomic_swap_differential_warmstart_8way():
+    mesh = jax.make_mesh((8,), ("data",))
+    _swap_differential(sharded=True, mesh=mesh, warm_start=True,
+                       warm_polish_iters=128)
 
 
 def test_refresh_in_flight_flag_and_versioning():

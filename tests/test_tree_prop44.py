@@ -65,3 +65,25 @@ def test_beta_scaling_preserves_allocation():
         costs[betas] = inst_tree.total_cost(rep) / inst_tree.empty_cost()
     # normalized cost identical: degree-1 homogeneity in λ
     assert abs(costs[(1.0, 1.0)] - costs[(1.0, 4.0)]) < 1e-6
+
+
+def test_tree_cost_homogeneous_in_lambda():
+    """tree_cost (continuous Prop 4.4) is degree-1 homogeneous in λ —
+    for both the threshold solver (exact, ~1e-6) and mirror descent
+    (f32 fixed-iteration, ~2% slack). This is the property that lets
+    the warm-start pipeline solve one aggregate-rate chain and
+    replicate it across every cache of each tree level."""
+    from repro.core.placement import continuous as cont
+    rng = np.random.default_rng(4)
+    lams = rng.gamma(2.0, 1.0, 30)
+    betas = np.array([1.0, 0.5, 2.0])
+    spec = cont.ChainSpec(ks=(12.0, 24.0), hs=(0.0, 1.5), h_repo=6.0,
+                          gamma=1.0)
+    for c_scale in (3.0, 0.25):
+        c1 = cont.tree_cost(lams, betas, spec, use_thresholds=True)
+        cs = cont.tree_cost(c_scale * lams, betas, spec,
+                            use_thresholds=True)
+        assert abs(cs - c_scale * c1) <= 1e-6 * c_scale * c1
+    c1_md = cont.tree_cost(lams, betas, spec, use_thresholds=False)
+    c3_md = cont.tree_cost(3.0 * lams, betas, spec, use_thresholds=False)
+    assert abs(c3_md - 3.0 * c1_md) <= 2e-2 * 3.0 * c1_md
