@@ -1,0 +1,146 @@
+"""General-graph scenario bench: paper-GREEDY placement vs on-path
+LRU-style routing strategies on the same traces (results/bench/graphs.json).
+
+For each graph family (ISP-like / scale-free / Watts–Strogatz) and each
+demand shape (Zipf / Gaussian-around-barycenter), one multi-ingress
+trace is sampled and served two ways:
+
+* **paper-GREEDY** — the offline plane: build the empirical instance
+  from the trace (``demand.from_trace``), solve GREEDY, and evaluate
+  the placement's mean per-request cost with ``Instance.total_cost``
+  (with empirical frequencies this equals an exact replay of the trace
+  against the static placement, since per-request cost is deterministic
+  given the allocation).
+* **routing strategies** — the online plane: replay the identical trace
+  through ``core.routing.StrategyPlane`` (LCE / LCD / SIM-LRU by
+  default), reporting full-trace and warm-half mean costs and hit rate.
+
+Cache slots are budget-split over the graph by degree centrality
+(``core.scenarios.assign_budget``) for both planes, so the comparison
+isolates *content selection* (demand-aware offline vs λ-unaware LRU),
+not cache sizing. The ``check`` field asserts only conservation-level
+sanity (every mean cost ≤ the repository-only baseline); which plane
+wins by how much is the measurement.
+
+Schema documented in benchmarks/README.md.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line, save_json
+from repro.core import catalog as catalog_api
+from repro.core import demand as demand_api
+from repro.core import scenarios
+from repro.core.objective import Instance
+from repro.core.placement import greedy
+from repro.core.routing import StrategyPlane
+
+FAMILIES = ("isp", "scale_free", "watts_strogatz")
+STRATEGIES = ("lce", "lcd", "sim-lru")
+
+
+def _demands(cat, n_ingress: int, seed: int):
+    return (("zipf", demand_api.zipf(cat, alpha=0.9, n_ingress=n_ingress,
+                                     seed=seed)),
+            ("gauss", demand_api.gaussian_grid(cat, sigma=2.0,
+                                               n_ingress=n_ingress)))
+
+
+def bench_scenario(family: str, dem_name: str, dem, cat, sc,
+                   n_requests: int, seed: int) -> dict:
+    net = sc.net
+    rng = np.random.default_rng(seed)
+    objs, ings = dem.sample(n_requests, rng)
+
+    # repository-only baseline: mean h_repo over the trace
+    repo_cost = float(np.mean(net.h_repo[ings]))
+
+    # ---- paper-GREEDY on the empirical (trace) demand
+    emp = demand_api.from_trace(cat.n, objs, ings,
+                                n_ingress=net.n_ingress)
+    inst = Instance(net=net, cat=cat, dem=emp)
+    t0 = time.perf_counter()
+    slots = greedy(inst)
+    solve_s = time.perf_counter() - t0
+    greedy_cost = float(inst.total_cost(np.where(slots < 0, 0, slots)))
+
+    # ---- LRU-style strategies replay the identical trace
+    strat_rows = {}
+    for strat in STRATEGIES:
+        pl = StrategyPlane(net, cat.coords, metric=cat.metric,
+                           gamma=cat.gamma, strategy=strat, seed=seed)
+        t0 = time.perf_counter()
+        dec = pl.serve(objs, ings)
+        serve_s = time.perf_counter() - t0
+        half = n_requests // 2
+        strat_rows[strat] = {
+            "mean_cost": float(dec.cost.mean()),
+            "warm_mean_cost": float(dec.cost[half:].mean()),
+            "hit_rate": float(dec.hit.mean()),
+            "warm_hit_rate": float(dec.hit[half:].mean()),
+            "evictions": int(pl.n_evicted),
+            "serve_s": serve_s,
+        }
+
+    best = min(strat_rows, key=lambda s: strat_rows[s]["warm_mean_cost"])
+    row = {
+        "name": f"{family}_{dem_name}",
+        "family": family,
+        "graph_nodes": int(sc.graph.n_nodes),
+        "graph_edges": int(np.isfinite(np.triu(sc.graph.adj, 1)).sum()),
+        "placement": sc.placement,
+        "cache_budget": int(net.total_slots),
+        "n_caches": int(net.n_caches),
+        "n_ingress": int(net.n_ingress),
+        "n_objects": int(cat.n),
+        "demand": dem_name,
+        "n_requests": int(n_requests),
+        "repo_only_cost": repo_cost,
+        "greedy": {"mean_cost": greedy_cost, "solve_s": solve_s},
+        "strategies": strat_rows,
+        "best_strategy": best,
+        "greedy_vs_best_lru":
+            greedy_cost / strat_rows[best]["warm_mean_cost"],
+        "check": bool(
+            greedy_cost <= repo_cost + 1e-9
+            and all(r["mean_cost"] <= repo_cost + 1e-9
+                    for r in strat_rows.values())),
+    }
+    assert row["check"], f"{row['name']}: a plane exceeded the " \
+        f"repository-only baseline"
+    csv_line(row["name"], solve_s * 1e6,
+             f"greedy={greedy_cost:.3f},"
+             f"{best}={strat_rows[best]['warm_mean_cost']:.3f},"
+             f"repo={repo_cost:.3f}")
+    return row
+
+
+def run(smoke: bool = False) -> dict:
+    full = bool(os.environ.get("GRAPHS_BENCH_FULL"))
+    if smoke:
+        n_objects, n_requests, budget, n_ingress = 200, 800, 32, 4
+    elif full:
+        n_objects, n_requests, budget, n_ingress = 4000, 40000, 128, 8
+    else:
+        n_objects, n_requests, budget, n_ingress = 1200, 8000, 64, 6
+    cat = catalog_api.embedding_catalog(n=n_objects, dim=8, seed=0)
+    rows = []
+    for fi, family in enumerate(FAMILIES):
+        sc = scenarios.scenario(family, cache_budget=budget,
+                                placement="degree",
+                                n_ingress=n_ingress, seed=fi)
+        for dem_name, dem in _demands(cat, sc.net.n_ingress, seed=7):
+            rows.append(bench_scenario(family, dem_name, dem, cat, sc,
+                                       n_requests, seed=fi + 13))
+    save_json("graphs.json", rows)
+    return {"rows": rows,
+            "checks": {r["name"]: r["check"] for r in rows}}
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

@@ -17,13 +17,14 @@ def main() -> None:
                     help="paper-scale sizes (L=100, 10k items; slow)")
     ap.add_argument("--only", default="",
                     help="comma list: fig3,fig4,fig56,fig78,kernels,"
-                         "roofline,serving,warmstart")
+                         "roofline,serving,warmstart,graphs")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig3_tandem, fig4_allocations,
-                            fig56_both_arrivals, fig78_trace, kernel_bench,
-                            roofline_table, serving_bench, warmstart_bench)
+                            fig56_both_arrivals, fig78_trace, graphs_bench,
+                            kernel_bench, roofline_table, serving_bench,
+                            warmstart_bench)
 
     t0 = time.time()
     checks: dict = {}
@@ -55,6 +56,10 @@ def main() -> None:
         # gap bounds + (under WARMSTART_BENCH_FULL=1) the 10⁶ headline
         # are asserted inside the bench itself
         warmstart_bench.run(smoke=not args.full)
+    if want("graphs"):
+        # general-graph scenarios: paper-GREEDY vs on-path LRU routing
+        # strategies; the repo-baseline check is asserted in-bench
+        checks["graphs"] = graphs_bench.run(smoke=not args.full)["checks"]
 
     print(f"\n== paper-claim checks ({time.time()-t0:.0f}s) ==")
     n_fail = 0

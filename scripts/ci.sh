@@ -63,6 +63,10 @@ PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
 # topology classes — the gap bound is asserted inside the bench
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/warmstart_bench.py --smoke
+# general-graph smoke: paper-GREEDY vs on-path LRU strategies over the
+# three graph families — the repo-baseline check is asserted in-bench
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/graphs_bench.py --smoke
 if [[ "${CI_FULL:-0}" == "1" ]]; then
     PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" PLACEMENT_BENCH_FULL=1 \
         python benchmarks/placement_bench.py
@@ -72,4 +76,7 @@ if [[ "${CI_FULL:-0}" == "1" ]]; then
     # 10⁶-object warm-start headline (speedup-vs-frontier asserted)
     PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" WARMSTART_BENCH_FULL=1 \
         python benchmarks/warmstart_bench.py
+    # full general-graph sweep: 4k objects, 40k-request traces
+    PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" GRAPHS_BENCH_FULL=1 \
+        python benchmarks/graphs_bench.py
 fi

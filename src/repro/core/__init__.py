@@ -5,7 +5,11 @@ Public API:
   objective.Instance               — eqs. (1)-(4)
   placement.greedy / localswap / netduel / continuous / cascade
   simcache.SimCacheNetwork         — runtime lookup/forward/serve
+  scenarios                        — general-graph scenario generation
+  routing.StrategyPlane            — on-path LRU routing strategies
 """
-from repro.core import costs, topology, catalog, demand, objective
+from repro.core import (costs, topology, catalog, demand, objective,
+                        scenarios, routing)
 
-__all__ = ["costs", "topology", "catalog", "demand", "objective"]
+__all__ = ["costs", "topology", "catalog", "demand", "objective",
+           "scenarios", "routing"]

@@ -51,7 +51,14 @@ class Demand:
 
 
 def _normalize(lam: np.ndarray) -> np.ndarray:
-    return (lam / lam.sum()).astype(np.float64)
+    """Normalize rates to sum 1, rejecting degenerate inputs up front:
+    a zero/NaN total would silently produce NaN lam here and only blow
+    up later deep inside a solver."""
+    total = float(np.sum(lam))
+    if not np.isfinite(total) or total <= 0.0:
+        raise ValueError(
+            f"demand rates must have a positive finite sum, got {total}")
+    return (lam / total).astype(np.float64)
 
 
 def gaussian_grid(cat: Catalog, sigma: float, n_ingress: int = 1,
@@ -91,7 +98,27 @@ def zipf(cat: Catalog, alpha: float = 0.8, n_ingress: int = 1, seed: int = 0,
 
 def from_trace(n_objects: int, obj_ids: np.ndarray, ingress_ids: np.ndarray,
                n_ingress: int = 1) -> Demand:
-    """Empirical demand from a request trace (object id, ingress id)."""
+    """Empirical demand from a request trace (object id, ingress id).
+
+    Raises ``ValueError`` on an empty trace or on ids outside the
+    catalog/ingress ranges — both used to flow through as NaN lam or an
+    IndexError from ``np.add.at``, failing far from the broken input."""
+    obj_ids = np.asarray(obj_ids, dtype=np.int64)
+    ingress_ids = np.asarray(ingress_ids, dtype=np.int64)
+    if obj_ids.size == 0:
+        raise ValueError("empty trace: no requests to build demand from")
+    if obj_ids.shape != ingress_ids.shape:
+        raise ValueError(
+            f"trace length mismatch: {obj_ids.size} object ids vs "
+            f"{ingress_ids.size} ingress ids")
+    if obj_ids.min() < 0 or obj_ids.max() >= n_objects:
+        raise ValueError(
+            f"object ids must be in [0, {n_objects}), got range "
+            f"[{obj_ids.min()}, {obj_ids.max()}]")
+    if ingress_ids.min() < 0 or ingress_ids.max() >= n_ingress:
+        raise ValueError(
+            f"ingress ids must be in [0, {n_ingress}), got range "
+            f"[{ingress_ids.min()}, {ingress_ids.max()}]")
     lam = np.zeros((n_ingress, n_objects), dtype=np.float64)
     np.add.at(lam, (ingress_ids, obj_ids), 1.0)
     return Demand(lam=_normalize(lam), name="trace")

@@ -14,6 +14,16 @@ between batches — the loop never blocks on a solve.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
       --streaming --streams 4 --requests 1024 --netduel
+
+``--scenario`` swaps the built-in 3-level hierarchy for a generated
+general-graph network (core/scenarios.py: isp / scale_free /
+watts_strogatz with degree-centrality cache sizing) and serves
+multi-ingress traffic through the on-path strategy plane picked by
+``--strategy`` (core/routing.py) — the λ-unaware online alternative to
+the offline-placement plane:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+      --streaming --scenario scale_free --strategy lce --requests 512
 """
 from __future__ import annotations
 
@@ -25,6 +35,8 @@ import numpy as np
 from repro.configs.registry import get_smoke_config, list_archs
 from repro.core import catalog as catalog_api
 from repro.core import demand as demand_api
+from repro.core import scenarios as scenarios_api
+from repro.core.routing import STRATEGIES
 from repro.models import model as model_api
 from repro.serve import (EngineConfig, SimCacheEngine, StreamDriver,
                          StreamSpec)
@@ -34,26 +46,30 @@ def run_batch_loop(eng, cfg, dem, args) -> None:
     rng = np.random.default_rng(0)
     n_batches = args.requests // args.batch
     for i in range(n_batches):
-        ids, _ = dem.sample(args.batch, rng)
+        ids, ings = dem.sample(args.batch, rng)
         prompts = jnp.asarray(rng.integers(0, cfg.vocab,
                                            (args.batch, 16)).astype(np.int32))
-        eng.serve(ids, prompts)
-        if i == n_batches // 2:
+        eng.serve(ids, prompts, ingress_ids=ings)
+        if i == n_batches // 2 and eng.routing is None:
             pred = eng.refresh_placement()
             print(f"[serve] placement refreshed; predicted C(A)={pred:.2f}")
 
 
 def run_streaming(eng, cat, args) -> None:
+    n_ing = eng.net.n_ingress
     streams = [
-        StreamSpec(demand=demand_api.zipf(cat, alpha=1.0, seed=s + 1),
+        StreamSpec(demand=demand_api.zipf(cat, alpha=1.0,
+                                          n_ingress=n_ing, seed=s + 1),
                    rate=1.0 + s, seed=s + 1, name=f"stream{s}")
         for s in range(args.streams)]
     drv = StreamDriver(eng, streams, max_batch=args.batch * 4,
                        batch_window=2.0, prompt_len=16,
-                       refresh_every=args.refresh_every)
+                       refresh_every=(0 if eng.routing is not None
+                                      else args.refresh_every))
     drv.run(max(args.requests // 8, args.batch))   # observe demand cold
-    pred = eng.refresh_placement()
-    print(f"[serve] initial placement; predicted C(A)={pred:.2f}")
+    if eng.routing is None:
+        pred = eng.refresh_placement()
+        print(f"[serve] initial placement; predicted C(A)={pred:.2f}")
     st = drv.run(args.requests)
     drv.drain_refresh()
     print(f"[serve] streaming: {st.n_requests} requests in "
@@ -85,6 +101,18 @@ def main() -> None:
                          "bounded polish instead of the O(O·J) solver)")
     ap.add_argument("--warm-polish-iters", type=int, default=512,
                     help="LOCALSWAP polish window after the warm start")
+    ap.add_argument("--scenario", default=None,
+                    choices=sorted(scenarios_api.GENERATORS),
+                    help="serve a generated general-graph network "
+                         "through the on-path strategy plane instead "
+                         "of the built-in 3-level hierarchy")
+    ap.add_argument("--strategy", default="lce", choices=STRATEGIES,
+                    help="on-path routing strategy (with --scenario)")
+    ap.add_argument("--cache-budget", type=int, default=64,
+                    help="total cache slots split over the graph by "
+                         "degree centrality (with --scenario)")
+    ap.add_argument("--ingress", type=int, default=4,
+                    help="number of ingress nodes (with --scenario)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -92,13 +120,29 @@ def main() -> None:
         raise SystemExit("serve launcher demo supports decoder-only archs")
     params = model_api.init_params(cfg, 0)
     cat = catalog_api.embedding_catalog(n=1000, dim=32, seed=0)
-    dem = demand_api.zipf(cat, alpha=1.0, seed=1)
-    ecfg = EngineConfig(algo=args.algo, netduel=args.netduel,
-                        refresh_on_promotion=args.netduel,
-                        warm_start=args.warm_start,
-                        warm_polish_iters=args.warm_polish_iters)
-    eng = SimCacheEngine(cfg, params, ecfg, cat.coords)
-    eng.calibrate(jnp.zeros((args.batch, 16), jnp.int32))
+    if args.scenario:
+        sc = scenarios_api.scenario(args.scenario,
+                                    cache_budget=args.cache_budget,
+                                    placement="degree",
+                                    n_ingress=args.ingress, seed=0)
+        dem = demand_api.zipf(cat, alpha=1.0,
+                              n_ingress=sc.net.n_ingress, seed=1)
+        ecfg = EngineConfig(algo=args.algo, strategy=args.strategy)
+        # the fused simcache is single-ingress; the strategy plane
+        # serves the custom net, so no calibrate() here
+        eng = SimCacheEngine(cfg, params, ecfg, cat.coords, net=sc.net)
+        print(f"[serve] scenario {args.scenario}: "
+              f"{sc.graph.n_nodes} nodes, {sc.net.n_caches} caches "
+              f"({sc.net.total_slots} slots), "
+              f"{sc.net.n_ingress} ingress, strategy {args.strategy}")
+    else:
+        dem = demand_api.zipf(cat, alpha=1.0, seed=1)
+        ecfg = EngineConfig(algo=args.algo, netduel=args.netduel,
+                            refresh_on_promotion=args.netduel,
+                            warm_start=args.warm_start,
+                            warm_polish_iters=args.warm_polish_iters)
+        eng = SimCacheEngine(cfg, params, ecfg, cat.coords)
+        eng.calibrate(jnp.zeros((args.batch, 16), jnp.int32))
 
     if args.streaming:
         run_streaming(eng, cat, args)

@@ -132,8 +132,9 @@ from repro.core.placement import (DuelPlane, device_greedy,
                                   device_localswap, greedy,
                                   greedy_then_localswap, localswap,
                                   warmstart)
+from repro.core.routing import StrategyPlane
 from repro.core.simcache import SimCacheNetwork
-from repro.core.topology import tpu_hierarchy
+from repro.core.topology import CacheNetwork, tpu_hierarchy
 from repro.launch.sharding import LookupShardPolicy
 from repro.models import model as model_api
 
@@ -196,6 +197,14 @@ class EngineConfig:
     warm_polish_iters: int = 512  # LOCALSWAP polish window after the
     #                               analytic warm start (O(1) in catalog
     #                               size; 0 = pure analytic placement)
+    strategy: str | None = None   # on-path routing strategy (core/routing.py:
+    #                               lce | lcd | probcache | sim-lru | rnd-lru)
+    #                               instead of the offline-placement plane —
+    #                               the λ-unaware baseline on any graph,
+    #                               including multi-ingress nets the fused
+    #                               simcache can't serve
+    strategy_threshold: float | None = None  # C_a admission threshold θ
+    strategy_seed: int = 0        # probcache / rnd-lru coin seed
 
 
 @dataclasses.dataclass
@@ -263,14 +272,33 @@ class SimCacheEngine:
 
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig,
                  catalog_coords: np.ndarray,
-                 mesh: jax.sharding.Mesh | None = None):
+                 mesh: jax.sharding.Mesh | None = None,
+                 net: CacheNetwork | None = None):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.coords = catalog_coords.astype(np.float32)   # request space
-        self.net = tpu_hierarchy(ecfg.k_device, ecfg.k_pod, ecfg.k_global,
-                                 ecfg.h_ici, ecfg.h_dcn, ecfg.h_model)
-        self.counts = np.zeros(self.coords.shape[0], dtype=np.float64)
+        # ``net`` overrides the built-in 3-level hierarchy with any
+        # CacheNetwork (e.g. a core.scenarios general-graph scenario);
+        # calibrate() only knows how to rescale the built-in one.
+        self.custom_net = net is not None
+        self.net = net if net is not None else tpu_hierarchy(
+            ecfg.k_device, ecfg.k_pod, ecfg.k_global,
+            ecfg.h_ici, ecfg.h_dcn, ecfg.h_model)
+        # per-(ingress, object) empirical demand — multi-ingress nets see
+        # the demand each ingress actually received (single-ingress
+        # callers land everything in row 0)
+        self.counts = np.zeros((self.net.n_ingress, self.coords.shape[0]),
+                               dtype=np.float64)
+        # on-path strategy plane: when configured it IS the serving
+        # decision maker (per-request LRU walk over the ingress's path)
+        # and the offline simcache is never built
+        self.routing: StrategyPlane | None = None
+        if ecfg.strategy is not None:
+            self.routing = StrategyPlane(
+                self.net, self.coords, metric=ecfg.metric,
+                gamma=ecfg.gamma, strategy=ecfg.strategy,
+                threshold=ecfg.strategy_threshold, seed=ecfg.strategy_seed)
         self.responses: dict[int, np.ndarray] = {}        # payload store
         self.stats = ServeStats()
         self.duel: DuelPlane | None = None                # online §5 plane
@@ -286,7 +314,11 @@ class SimCacheEngine:
         self.refresh_count = 0            # completed installs (sync+async)
         self.swap_count = 0               # async atomic swaps
         self.swap_stall_s = 0.0           # total serving-thread swap time
-        self.max_swap_stall_s = 0.0
+        self.max_swap_stall_s = 0.0       # all-time max across swaps
+        self.last_swap_stall_s = 0.0      # most recent swap only — what
+        #                                   per-run windows (stream.py) max
+        #                                   over, instead of the all-time
+        #                                   value above
         self.last_predicted_cost: float | None = None
         # key-axis shard policy for the sharded data plane: resolved once
         # from the mesh, reused on every placement refresh
@@ -326,6 +358,11 @@ class SimCacheEngine:
         against the measured costs, and an armed duel plane — priced in
         the old cost units — is re-armed from the observed window.
         """
+        if self.custom_net:
+            raise ValueError(
+                "calibrate() rescales the built-in tpu_hierarchy levels; "
+                "a custom CacheNetwork carries its own cost unit — build "
+                "it with calibrated delays instead")
         self._prefill(self.params, {"tokens": sample_prompt})
         t0 = time.perf_counter()
         for _ in range(n):
@@ -359,13 +396,17 @@ class SimCacheEngine:
         the old ``counts + 1e-9`` floor drowned the tail below f32
         resolution instead. A cold engine (no requests yet) falls back
         to uniform demand.
+
+        Counts are per-(ingress, object): a multi-ingress net's solve
+        sees the demand each ingress actually received, not a collapsed
+        single-row copy (the old ``lam[None, :]`` hardcoding).
         """
         total = self.counts.sum()
         if total <= 0.0:
             lam = np.full_like(self.counts, 1.0 / self.counts.size)
         else:
             lam = self.counts / total
-        dem = demand_api.Demand(lam=lam[None, :])
+        dem = demand_api.Demand(lam=lam)
         cat = Catalog(coords=self.coords, metric=self.ecfg.metric,
                       gamma=self.ecfg.gamma)
         return Instance(net=self.net, cat=cat, dem=dem)
@@ -545,6 +586,7 @@ class SimCacheEngine:
         stall = time.perf_counter() - t0
         self.swap_stall_s += stall
         self.max_swap_stall_s = max(self.max_swap_stall_s, stall)
+        self.last_swap_stall_s = stall
         self.swap_count += 1
         self.last_predicted_cost = pred
         self._in_flight = False
@@ -556,11 +598,25 @@ class SimCacheEngine:
         install it into the placement buffer (version += 1) — shared by
         the offline install, the online duel's promotion churn, and the
         calibration rebuild."""
+        if self.net.n_ingress > 1:
+            raise ValueError(
+                "the fused simcache serves one ingress row of H; a "
+                "multi-ingress CacheNetwork needs the on-path strategy "
+                "plane (EngineConfig.strategy) instead")
         if slot_cache is None:
             slot_cache = self.net.slot_layout()
-        hs = [0.0, self.ecfg.h_ici, self.ecfg.h_dcn]
+        if self.custom_net:
+            # a custom single-ingress net (core/scenarios.py) carries its
+            # own per-cache reach costs in its H row
+            hs = [float(h) for h in np.asarray(self.net.H[0], np.float64)]
+            h_repo = float(self.net.h_repo[0])
+        else:
+            # built-in hierarchy: use the exact f64 config values (the
+            # net stores H in f32 — going through it would round them)
+            hs = [0.0, self.ecfg.h_ici, self.ecfg.h_dcn]
+            h_repo = self.ecfg.h_model
         simcache = SimCacheNetwork.from_placement(
-            self.coords, slots, slot_cache, hs, self.ecfg.h_model,
+            self.coords, slots, slot_cache, hs, h_repo,
             metric=self.ecfg.metric, gamma=self.ecfg.gamma,
             fused=self.ecfg.fused, sharded=self.ecfg.sharded,
             mesh=self.mesh,
@@ -571,10 +627,13 @@ class SimCacheEngine:
         self.placement.install(simcache, np.asarray(slots), slot_cache)
 
     # --------------------------------------------------------- data plane
-    def serve(self, request_ids: np.ndarray, prompts: jnp.ndarray
+    def serve(self, request_ids: np.ndarray, prompts: jnp.ndarray,
+              ingress_ids: np.ndarray | None = None
               ) -> tuple[list, ServeStats]:
         """Serve a batch. request_ids index the catalog (their embeddings
         are the lookup keys); prompts are the token batch for misses.
+        ``ingress_ids`` says where each request entered the network
+        (None → ingress 0, the single-ingress hierarchy's only row).
 
         With ``EngineConfig.bucket`` the lookup, the duel observation and
         the miss-prefill all run at the batch's power-of-two bucket shape
@@ -585,12 +644,30 @@ class SimCacheEngine:
         t_batch0 = time.perf_counter()
         request_ids = np.asarray(request_ids)
         n = len(request_ids)
-        self.counts[request_ids] += 1.0
+        if ingress_ids is None:
+            ingress_ids = np.zeros(n, dtype=np.int64)
+        else:
+            ingress_ids = np.asarray(ingress_ids, dtype=np.int64)
+        # np.add.at, not fancy-indexed +=: a batch with the same object
+        # twice must count twice (the += form collapses duplicates and
+        # undercounts exactly the hot objects of a skewed trace)
+        np.add.at(self.counts, (ingress_ids, request_ids), 1.0)
         self.stats.n_requests += n
         out: list = [None] * n
         bucket = self.ecfg.bucket
 
-        if self.simcache is None:
+        route_dec = None
+        if self.routing is not None:
+            # on-path strategy plane: per-request LRU walk over the
+            # ingress's forwarding path decides server and insertions —
+            # no offline simcache, no duel (λ-unaware by design)
+            route_dec = self.routing.serve(request_ids, ingress_ids)
+            self.stats.total_cost += float(route_dec.cost.sum())
+            self.stats.total_approx_cost += float(
+                route_dec.approx_cost.sum())
+            self.stats.n_hits += int(route_dec.hit.sum())
+            miss_idx = np.nonzero(~route_dec.hit)[0]
+        elif self.simcache is None:
             miss_idx = np.arange(n)
         else:
             q = jnp.asarray(self.coords[request_ids])
@@ -635,12 +712,20 @@ class SimCacheEngine:
             logits, _ = self._prefill(self.params, {"tokens": sel})
             resp = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
             self.stats.model_calls += 1
-            if self.simcache is None:
+            if self.routing is None and self.simcache is None:
+                # cold engine without a strategy plane: repository cost
+                # per miss (the routing plane already counted dec.cost)
                 self.stats.total_cost += self.ecfg.h_model * len(miss_idx)
             for j, i in enumerate(miss_idx):
                 rid = int(request_ids[i])
                 self.responses[rid] = resp[j:j + 1]
                 out[i] = resp[j:j + 1]
+        if route_dec is not None:
+            # fill hits AFTER the miss prefill: a request can hit a key
+            # an earlier miss of this very batch just inserted, whose
+            # response only exists once the model ran
+            for i in np.nonzero(route_dec.hit)[0]:
+                out[i] = self.responses.get(int(route_dec.payload[i]))
         self.stats.batch_latencies_ms.append(
             (time.perf_counter() - t_batch0) * 1e3)
         return out, self.stats

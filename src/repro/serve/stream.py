@@ -90,7 +90,7 @@ class DriverStats:
     refreshes_started: int = 0
     swaps: int = 0
     swap_stall_s: float = 0.0
-    max_swap_stall_s: float = 0.0
+    max_swap_stall_s: float = 0.0   # max over THIS run's swaps only
     placement_events: int = 0
 
     @property
@@ -156,11 +156,14 @@ class StreamDriver:
         heapq.heapify(self._heap)
 
     # ------------------------------------------------------ batch forming
-    def _next_batch(self, n_left: int) -> np.ndarray:
+    def _next_batch(self, n_left: int) -> tuple[np.ndarray, np.ndarray]:
         """Pop arrivals in virtual-time order until the batch closes:
         ``max_batch`` pending, the batch open longer than
-        ``batch_window`` virtual time, or the run budget exhausted."""
+        ``batch_window`` virtual time, or the run budget exhausted.
+        Returns (object_ids, ingress_ids) — the ingress each request
+        entered at rides along to the engine's demand accounting."""
         ids: list[int] = []
+        ings: list[int] = []
         t_open: float | None = None
         cap = min(self.max_batch, n_left)
         while len(ids) < cap:
@@ -169,12 +172,14 @@ class StreamDriver:
                 break
             _, si = heapq.heappop(self._heap)
             stream = self.streams[si]
-            t_arr, obj, _ing = stream.pop()
+            t_arr, obj, ing = stream.pop()
             if t_open is None:
                 t_open = t_arr
             ids.append(obj)
+            ings.append(ing)
             heapq.heappush(self._heap, (stream.t, si))
-        return np.asarray(ids, dtype=np.int64)
+        return (np.asarray(ids, dtype=np.int64),
+                np.asarray(ings, dtype=np.int64))
 
     def _prompts(self, n: int) -> jnp.ndarray:
         vocab = self.engine.cfg.vocab
@@ -194,8 +199,8 @@ class StreamDriver:
         events0 = eng.placement_events
         t_run0 = time.perf_counter()
         while st.n_requests < n_requests:
-            ids = self._next_batch(n_requests - st.n_requests)
-            eng.serve(ids, self._prompts(len(ids)))
+            ids, ings = self._next_batch(n_requests - st.n_requests)
+            eng.serve(ids, self._prompts(len(ids)), ingress_ids=ings)
             self._batches_run += 1
             st.n_batches += 1
             st.n_requests += len(ids)
@@ -211,12 +216,16 @@ class StreamDriver:
                     st.refreshes_started += 1
             # the atomic swap point: a finished background solve is
             # installed between batches, never mid-lookup
-            eng.poll_refresh()
+            if eng.poll_refresh():
+                # per-run stall window: max over the swaps *this* run
+                # performed, not the engine's all-time high-water mark
+                # (which a later run would report as its own stall)
+                st.max_swap_stall_s = max(st.max_swap_stall_s,
+                                          eng.last_swap_stall_s)
             st.versions.append(eng.placement.version)
         st.wall_s = time.perf_counter() - t_run0
         st.swaps = eng.swap_count - swaps0
         st.swap_stall_s = eng.swap_stall_s - stall0
-        st.max_swap_stall_s = eng.max_swap_stall_s
         st.placement_events = eng.placement_events - events0
         return st
 

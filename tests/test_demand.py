@@ -1,0 +1,79 @@
+"""Demand-model validation: degenerate traces must fail loudly at
+construction (the old code divided by zero in ``_normalize`` and handed
+the solvers NaN rates that only exploded much later)."""
+import numpy as np
+import pytest
+
+from repro.core import catalog as catalog_api
+from repro.core import demand as demand_api
+
+
+@pytest.fixture(scope="module")
+def cat():
+    return catalog_api.embedding_catalog(n=50, dim=4, seed=0)
+
+
+def test_from_trace_counts_requests(cat):
+    dem = demand_api.from_trace(10, np.array([1, 1, 3, 7]),
+                                np.array([0, 1, 0, 1]), n_ingress=2)
+    assert dem.lam.shape == (2, 10)
+    assert dem.lam.sum() == pytest.approx(1.0)
+    assert dem.lam[0, 1] == pytest.approx(0.25)
+    assert dem.lam[1, 1] == pytest.approx(0.25)
+    assert dem.lam[0, 3] == pytest.approx(0.25)
+    assert dem.lam[1, 7] == pytest.approx(0.25)
+
+
+def test_from_trace_empty_raises(cat):
+    with pytest.raises(ValueError, match="empty trace"):
+        demand_api.from_trace(10, np.array([], np.int64),
+                              np.array([], np.int64))
+
+
+def test_from_trace_length_mismatch_raises(cat):
+    with pytest.raises(ValueError, match="length mismatch"):
+        demand_api.from_trace(10, np.array([1, 2, 3]),
+                              np.array([0, 0]), n_ingress=1)
+
+
+def test_from_trace_object_id_out_of_range_raises(cat):
+    with pytest.raises(ValueError, match="object ids"):
+        demand_api.from_trace(10, np.array([3, 10]), np.array([0, 0]))
+    with pytest.raises(ValueError, match="object ids"):
+        demand_api.from_trace(10, np.array([-1, 3]), np.array([0, 0]))
+
+
+def test_from_trace_ingress_id_out_of_range_raises(cat):
+    """The n_ingress/ids mismatch: a trace recorded on a 4-ingress
+    network loaded with the default n_ingress=1 must be rejected, not
+    silently mis-binned (or IndexError'd) by np.add.at."""
+    with pytest.raises(ValueError, match="ingress ids"):
+        demand_api.from_trace(10, np.array([1, 2]), np.array([0, 3]),
+                              n_ingress=1)
+    with pytest.raises(ValueError, match="ingress ids"):
+        demand_api.from_trace(10, np.array([1, 2]), np.array([0, -2]),
+                              n_ingress=2)
+
+
+def test_normalize_zero_rates_raises():
+    with pytest.raises(ValueError, match="positive finite sum"):
+        demand_api._normalize(np.zeros((1, 8)))
+
+
+def test_normalize_nonfinite_raises():
+    lam = np.ones((1, 8))
+    lam[0, 3] = np.inf
+    with pytest.raises(ValueError, match="positive finite sum"):
+        demand_api._normalize(lam)
+    lam[0, 3] = np.nan
+    with pytest.raises(ValueError, match="positive finite sum"):
+        demand_api._normalize(lam)
+
+
+def test_generators_still_normalize(cat):
+    """The validation must not reject any legitimate generator output."""
+    for dem in (demand_api.uniform(cat),
+                demand_api.zipf(cat, alpha=0.8, n_ingress=3),
+                demand_api.gaussian_grid(cat, sigma=2.0)):
+        assert dem.lam.sum() == pytest.approx(1.0)
+        assert np.isfinite(dem.lam).all()

@@ -1,0 +1,253 @@
+"""Differential suite for the general-graph scenario plane.
+
+Covers the ISSUE-8 invariants: the generated metric closure and H
+matrix (symmetry, triangle inequality, off-path +inf, on-path costs
+bounded by h_repo), ``classify_topology`` cleanly returning None on
+irreducible graphs (while the chain generator still classifies as a
+chain), host-vs-device GREEDY bit-identity on a random scale-free
+instance (1-way here, 8-way under scripts/ci.sh pass 2), and the
+on-path strategy layer's conservation contract (every request served
+exactly once, occupancy never above capacity).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import catalog as catalog_api
+from repro.core import demand as demand_api
+from repro.core import scenarios, topology
+from repro.core.objective import DeviceInstance, Instance
+from repro.core.placement import device_greedy, greedy, warmstart
+from repro.core.routing import STRATEGIES, RouteDecision, StrategyPlane
+from repro.launch.mesh import make_lookup_mesh
+
+FAMILIES = sorted(scenarios.GENERATORS)
+
+
+# ===================================================================
+# graphs + shortest paths
+# ===================================================================
+@pytest.mark.parametrize("family", FAMILIES)
+def test_graph_generators_connected_symmetric(family):
+    for seed in (0, 1):
+        g = scenarios.GENERATORS[family](seed=seed)
+        adj = g.adj
+        np.testing.assert_array_equal(adj, adj.T)
+        assert np.all(np.diag(adj) == 0.0)
+        fin = np.isfinite(adj) & (adj > 0)
+        assert np.all(adj[fin] > 0.0)
+        # single connected component: the metric closure is all-finite
+        assert np.isfinite(scenarios.floyd_warshall(adj)).all()
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_metric_closure_invariants(family):
+    """dist is a metric: zero diagonal, symmetric, triangle inequality —
+    and Floyd–Warshall == batched Dijkstra on every row."""
+    g = scenarios.GENERATORS[family](seed=2)
+    dist = scenarios.floyd_warshall(g.adj)
+    V = dist.shape[0]
+    assert np.all(np.diag(dist) == 0.0)
+    np.testing.assert_allclose(dist, dist.T, rtol=0, atol=1e-12)
+    # triangle: dist[u, w] <= dist[u, v] + dist[v, w] for all v
+    via = dist[:, :, None] + dist[None, :, :]      # (u, v, w)
+    assert np.all(dist[:, None, :].repeat(V, 1) <= via + 1e-9)
+    dij = scenarios.batched_dijkstra(g.adj, np.arange(V))
+    np.testing.assert_allclose(dij, dist, rtol=0, atol=1e-9)
+    # dispatcher picks both methods consistently
+    rows = np.array([0, 3, 5])
+    np.testing.assert_allclose(
+        scenarios.shortest_paths(g.adj, rows, method="dijkstra"),
+        scenarios.shortest_paths(g.adj, rows, method="fw"),
+        rtol=0, atol=1e-9)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("placement", sorted(scenarios.CENTRALITIES))
+def test_generated_H_invariants(family, placement):
+    """The emitted CacheNetwork obeys the paper's routing constraint:
+    off-path caches are +inf, on-path reach costs are the true shortest
+    distances (so never above h_repo), every path ends at the
+    repository, and the slot budget is met exactly."""
+    sc = scenarios.scenario(family, cache_budget=40, placement=placement,
+                            n_ingress=5, seed=4)
+    net, dist = sc.net, sc.dist
+    assert net.total_slots == 40
+    assert net.n_ingress == 5
+    node_of = {j: int(v) for j, v in enumerate(sc.cache_nodes)}
+    for i, p in enumerate(sc.paths):
+        assert p[0] == sc.ingress_nodes[i] and p[-1] == sc.repo_node
+        # path distances are consistent with the closure
+        assert dist[p[0], p[-1]] == pytest.approx(float(net.h_repo[i]),
+                                                  rel=1e-6)
+        on_path = {int(v) for v in p}
+        for j in range(net.n_caches):
+            if node_of[j] in on_path:
+                assert np.isfinite(net.H[i, j])
+                assert net.H[i, j] == pytest.approx(
+                    dist[sc.ingress_nodes[i], node_of[j]], rel=1e-6)
+                assert net.H[i, j] <= net.h_repo[i] + 1e-6
+            else:
+                assert np.isinf(net.H[i, j])     # off-path: +inf
+    # coverage repair: any ingress whose path has intermediates sees
+    # at least one cache
+    for i, p in enumerate(sc.paths):
+        if len(p) > 2:
+            assert np.isfinite(net.H[i]).any()
+
+
+def test_assign_budget_exact_and_proportional():
+    caps = scenarios.assign_budget(np.array([4.0, 2.0, 1.0, 1.0]), 16)
+    assert caps.sum() == 16
+    assert caps[0] == 8 and caps[1] == 4
+    caps = scenarios.assign_budget(np.zeros(3), 7)   # uniform fallback
+    assert caps.sum() == 7 and caps.max() - caps.min() <= 1
+    assert scenarios.assign_budget(np.ones(5), 0).sum() == 0
+
+
+# ===================================================================
+# warm-start classification falls through on irreducible graphs
+# ===================================================================
+@pytest.mark.parametrize("family", FAMILIES)
+def test_classify_topology_none_on_general_graphs(family):
+    """Multi-ingress general graphs are not §4-reducible: classify must
+    return None (the solver then falls back to discrete GREEDY), never
+    misclassify them as a chain/tree/tandem."""
+    sc = scenarios.scenario(family, cache_budget=40, placement="degree",
+                            n_ingress=5, seed=0)
+    assert warmstart.classify_topology(sc.net) is None
+
+
+def test_classify_topology_chain_still_reduces():
+    """The chain generator's output keeps its §4.2 reduction — the
+    general-graph plane must not break the reducible topologies."""
+    net = topology.chain(4, 3, 2.0, 20.0)
+    red = warmstart.classify_topology(net)
+    assert isinstance(red, warmstart.ChainReduction)
+    assert red.path == (0, 1, 2, 3)
+
+
+def test_classify_topology_single_ingress_scenario_is_chain():
+    """A single-ingress scenario IS a chain program (the finite-H caches
+    ordered by reach cost): classification must succeed, with the path
+    sorted by H."""
+    sc = scenarios.scenario("isp", cache_budget=24,
+                            placement="degree", n_ingress=1, seed=0)
+    assert np.isfinite(sc.net.H[0]).any()
+    red = warmstart.classify_topology(sc.net)
+    assert isinstance(red, warmstart.ChainReduction)
+    hs = np.asarray(red.spec.hs)
+    assert np.all(np.diff(hs) >= 0)
+
+
+# ===================================================================
+# solvers consume generated instances unchanged
+# ===================================================================
+def scale_free_instance(seed=7, n=160, dim=5):
+    sc = scenarios.scenario("scale_free", cache_budget=30,
+                            placement="betweenness", n_ingress=4,
+                            seed=seed)
+    cat = catalog_api.embedding_catalog(n=n, dim=dim, seed=seed)
+    dem = demand_api.zipf(cat, alpha=0.9, n_ingress=sc.net.n_ingress,
+                          seed=seed + 1)
+    return Instance(net=sc.net, cat=cat, dem=dem)
+
+
+def test_host_vs_device_greedy_bit_identical_on_scale_free():
+    """The ISSUE-8 differential: GREEDY on a random scale-free instance
+    is bit-identical between the host NumPy oracle and the device gain
+    oracle — at the current device count (1-way in tier-1, 8-way in
+    ci.sh pass 2)."""
+    inst = scale_free_instance()
+    host = greedy(inst)
+    mesh = make_lookup_mesh(jax.device_count())
+    for dinst in (DeviceInstance.from_instance(inst,
+                                               materialize_ca=False),
+                  DeviceInstance.from_instance(inst, mesh=mesh,
+                                               axes=("data",),
+                                               materialize_ca=False)):
+        np.testing.assert_array_equal(host, device_greedy(dinst))
+
+
+def test_generated_instance_objective_sane():
+    """Placement strictly beats the empty allocation on a generated
+    instance (caching gain > 0 end to end through eq. (4))."""
+    inst = scale_free_instance(seed=9)
+    slots = greedy(inst)
+    empty = np.full_like(slots, -1)
+    assert inst.total_cost(np.where(slots < 0, 0, slots)) \
+        < inst.total_cost(np.where(empty < 0, 0, empty))
+
+
+# ===================================================================
+# on-path strategy layer: conservation
+# ===================================================================
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_strategy_conservation(strategy):
+    """Every request is served exactly once (by one cache or the
+    repository), occupancy never exceeds capacity, and serving cost
+    never exceeds the ingress's repository cost."""
+    sc = scenarios.scenario("watts_strogatz", cache_budget=36,
+                            placement="degree", n_ingress=5, seed=3)
+    rng = np.random.default_rng(11)
+    coords = rng.normal(size=(250, 6)).astype(np.float32)
+    pl = StrategyPlane(sc.net, coords, strategy=strategy, seed=5)
+    n_total = 0
+    for _ in range(6):
+        objs = rng.integers(0, 250, size=64)
+        ings = rng.integers(0, sc.net.n_ingress, size=64)
+        dec = pl.serve(objs, ings)
+        assert isinstance(dec, RouteDecision)
+        # exactly one server per request: hit ⇔ a cache id, miss ⇔ −1
+        assert np.all((dec.cache >= 0) == dec.hit)
+        assert np.all(dec.payload[~dec.hit] == -1)
+        assert np.all(dec.payload[dec.hit] >= 0)
+        # cost is the chosen server's, never above the repo fallback
+        assert np.all(dec.cost <= sc.net.h_repo[ings] + 1e-9)
+        assert np.all(dec.cost[~dec.hit]
+                      == sc.net.h_repo[ings[~dec.hit]])
+        # occupancy within capacity after every batch
+        assert np.all(pl.occupancy() <= sc.net.capacities)
+        n_total += len(objs)
+    assert pl.n_served == n_total
+    # stored keys are unique per cache (LRU set semantics)
+    for keys in pl.contents():
+        assert len(keys) == len(set(keys.tolist()))
+
+
+def test_strategy_exact_hit_zero_approx_cost():
+    """Re-requesting the same object through the same ingress must hit
+    with zero approximation cost once inserted (lce, exact repeat)."""
+    sc = scenarios.scenario("isp", cache_budget=30, placement="degree",
+                            n_ingress=3, seed=0)
+    rng = np.random.default_rng(0)
+    coords = rng.normal(size=(50, 4)).astype(np.float32)
+    pl = StrategyPlane(sc.net, coords, strategy="lce", seed=0)
+    first = pl.serve(np.array([7]), np.array([0]))
+    assert not first.hit[0]                      # cold: repository
+    again = pl.serve(np.array([7]), np.array([0]))
+    assert again.hit[0]
+    assert again.approx_cost[0] == 0.0
+    assert again.payload[0] == 7
+    assert again.cost[0] < first.cost[0]
+
+
+def test_strategy_threshold_restricts_hits():
+    """With an admission threshold θ every hit's C_a is ≤ θ."""
+    sc = scenarios.scenario("isp", cache_budget=30, placement="degree",
+                            n_ingress=3, seed=0)
+    rng = np.random.default_rng(1)
+    coords = rng.normal(size=(120, 4)).astype(np.float32)
+    pl = StrategyPlane(sc.net, coords, strategy="sim-lru",
+                       threshold=0.5, seed=0)
+    for _ in range(5):
+        objs = rng.integers(0, 120, size=48)
+        ings = rng.integers(0, 3, size=48)
+        dec = pl.serve(objs, ings)
+        assert np.all(dec.approx_cost[dec.hit] <= 0.5 + 1e-9)
+
+
+def test_strategy_unknown_name_raises():
+    sc = scenarios.scenario("isp", cache_budget=10, n_ingress=2, seed=0)
+    with pytest.raises(ValueError, match="unknown strategy"):
+        StrategyPlane(sc.net, np.zeros((10, 2)), strategy="mru")

@@ -148,7 +148,7 @@ def test_observed_placement_tail_matches():
     eng, cfg, cat = make_engine(algo="greedy")
     # a head-only window: 12 requested objects with well-separated
     # counts against 72 slots forces the zero-gain tail regime
-    eng.counts[:12] = 2.0 ** np.arange(12)
+    eng.counts[0, :12] = 2.0 ** np.arange(12)
     inst = eng.observed_instance()
     assert np.all(inst.lam[0, 12:] == 0.0)
     host = greedy(inst)
@@ -169,6 +169,89 @@ def test_observed_placement_tail_matches():
     # carries ~sqrt(eps)·|x| self-distance noise on its diagonal that the
     # device's shape-stable form does not)
     assert abs(pred_dev - pred_host) < 1e-3 * eng.ecfg.h_model
+
+
+def test_engine_counts_duplicates_in_batch():
+    """Demand-undercount regression: a batch containing the same object
+    k times must add k to its count. The old fancy-indexed
+    ``counts[ids] += 1`` collapsed duplicates to a single increment —
+    undercounting exactly the hot objects of a skewed trace — so the
+    batched counts must match a sequential one-request-at-a-time replay."""
+    eng, cfg, cat = make_engine()
+    rng = np.random.default_rng(0)
+    # duplicate-heavy batches: ids drawn from a tiny head so most
+    # batches repeat objects many times
+    batches = [rng.integers(0, 5, size=32) for _ in range(6)]
+    for ids in batches:
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab, (len(ids), 8)).astype(np.int32))
+        eng.serve(ids, prompts)
+    expected = np.zeros(cat.n, dtype=np.float64)
+    for ids in batches:                  # sequential replay ground truth
+        for o in ids:
+            expected[int(o)] += 1.0
+    np.testing.assert_array_equal(eng.counts[0], expected)
+    assert eng.counts[0, :5].sum() == 6 * 32
+
+
+def test_engine_counts_thread_ingress_ids():
+    """Multi-ingress accounting: serve() with ``ingress_ids`` lands each
+    request in its own (ingress, object) cell, and observed_instance
+    exposes the full per-ingress matrix instead of a collapsed
+    ``lam[None, :]`` copy of row 0."""
+    from repro.core.scenarios import scenario
+
+    sc = scenario("isp", cache_budget=24, placement="degree", n_ingress=4,
+                  seed=0)
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              n_layers=2, d_model=64, n_heads=4,
+                              n_kv_heads=2, head_dim=16, d_ff=128, vocab=256)
+    params = model_api.init_params(cfg, 0)
+    cat = catalog_api.embedding_catalog(n=100, dim=8, seed=1)
+    ecfg = EngineConfig(metric="l2", strategy="lce")
+    eng = SimCacheEngine(cfg, params, ecfg, cat.coords, net=sc.net)
+    assert eng.counts.shape == (4, 100)
+    rng = np.random.default_rng(1)
+    ids = rng.integers(0, 100, size=40)
+    ings = rng.integers(0, 4, size=40)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (40, 8)).astype(np.int32))
+    eng.serve(ids, prompts, ingress_ids=ings)
+    expected = np.zeros((4, 100))
+    np.add.at(expected, (ings, ids), 1.0)
+    np.testing.assert_array_equal(eng.counts, expected)
+    inst = eng.observed_instance()
+    assert inst.lam.shape == (4, 100)
+    np.testing.assert_allclose(inst.lam, expected / expected.sum())
+
+
+def test_engine_strategy_plane_serves_end_to_end():
+    """EngineConfig.strategy on a general-graph net: every request is
+    answered, hits never exceed h_repo, occupancy respects capacities,
+    and repeated traffic on a small head warms the path caches."""
+    from repro.core.scenarios import scenario
+
+    sc = scenario("scale_free", cache_budget=32, placement="betweenness",
+                  n_ingress=4, seed=1)
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              n_layers=2, d_model=64, n_heads=4,
+                              n_kv_heads=2, head_dim=16, d_ff=128, vocab=256)
+    params = model_api.init_params(cfg, 0)
+    cat = catalog_api.embedding_catalog(n=100, dim=8, seed=1)
+    ecfg = EngineConfig(metric="l2", strategy="lce")
+    eng = SimCacheEngine(cfg, params, ecfg, cat.coords, net=sc.net)
+    assert eng.routing is not None and eng.simcache is None
+    rng = np.random.default_rng(2)
+    for _ in range(8):
+        ids = rng.integers(0, 10, size=16)       # tiny head: re-requests
+        ings = rng.integers(0, 4, size=16)
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab, (16, 8)).astype(np.int32))
+        out, stats = eng.serve(ids, prompts, ingress_ids=ings)
+        assert all(r is not None for r in out)   # every request answered
+    assert (eng.routing.occupancy() <= sc.net.capacities).all()
+    assert stats.n_hits > 0                      # warm head produced hits
+    assert stats.mean_cost <= float(sc.net.h_repo.max()) + 1e-9
 
 
 def test_engine_cold_observed_instance_is_uniform():

@@ -326,6 +326,60 @@ def test_stream_driver_refresh_cadence():
     assert st.requests_per_s > 0 and st.p99_ms >= st.p50_ms >= 0
 
 
+def test_stream_driver_stall_window_is_per_run():
+    """Stall-window regression: DriverStats.max_swap_stall_s must be the
+    max over the swaps of *that* run. The old code copied the engine's
+    all-time max, so a second run with no swaps at all still reported
+    the first run's stall as its own."""
+    eng, cfg, cat = make_engine(netduel=False)
+    drv = StreamDriver(eng, _streams(cat), max_batch=32,
+                       batch_window=2.0, refresh_every=4)
+    drv.run(64)
+    eng.refresh_placement()
+    st1 = drv.run(256)
+    drv.drain_refresh()
+    assert eng.swap_count > 0
+    assert st1.max_swap_stall_s > 0.0        # this run did swap
+    assert st1.max_swap_stall_s <= eng.max_swap_stall_s
+    # second run: no refresh cadence → no swaps → no stall to report
+    drv.refresh_every = 0
+    st2 = drv.run(64)
+    assert st2.swaps == 0
+    assert st2.max_swap_stall_s == 0.0, \
+        "a swap-free run must not report the engine's all-time stall"
+    assert eng.max_swap_stall_s > 0.0        # the all-time max survives
+
+
+def test_stream_driver_threads_ingress_ids():
+    """Ingress-threading regression: a multi-ingress stream population
+    must land each request in its own (ingress, object) demand cell.
+    The old driver popped ``(t, obj, _ing)`` and dropped the ingress, so
+    every request was accounted to ingress 0."""
+    from repro.core.scenarios import scenario
+
+    sc = scenario("isp", cache_budget=24, placement="degree",
+                  n_ingress=3, seed=0)
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              n_layers=2, d_model=64, n_heads=4,
+                              n_kv_heads=2, head_dim=16, d_ff=128,
+                              vocab=256)
+    params = model_api.init_params(cfg, 0)
+    cat = catalog_api.embedding_catalog(n=200, dim=16, seed=1)
+    ecfg = EngineConfig(metric="l2", strategy="sim-lru", netduel=False)
+    eng = SimCacheEngine(cfg, params, ecfg, cat.coords, net=sc.net)
+    specs = [StreamSpec(demand=demand_api.zipf(cat, alpha=1.0,
+                                               n_ingress=3, seed=s + 1),
+                        rate=4.0, seed=s + 1) for s in range(2)]
+    drv = StreamDriver(eng, specs, max_batch=32, batch_window=2.0)
+    st = drv.run(300)
+    assert st.n_requests == 300
+    assert eng.counts.shape == (3, 200)
+    per_ingress = eng.counts.sum(axis=1)
+    assert per_ingress.sum() == 300
+    assert np.count_nonzero(per_ingress) == 3, \
+        "multi-ingress demand collapsed into a single ingress row"
+
+
 def test_stream_rate_validation():
     eng, cfg, cat = make_engine(netduel=False)
     with pytest.raises(ValueError):
