@@ -9,10 +9,13 @@ Rows:
   embedding instance, host ``Instance.add_gain_all`` (cached C_a
   matrix while it fits, streamed row blocks past
   ``objective.CA_MATERIALIZE_MAX``) vs ``DeviceInstance.gains``
-  (streamed distance tiles, one jitted launch). O ∈ {10³, 10⁴} by
-  default; ``PLACEMENT_BENCH_FULL=1`` (the KERNEL_BENCH_FULL-style
-  nightly gate, see scripts/ci.sh) adds the 10⁵ row, where the dense
-  host C_a can no longer exist at all.
+  (streamed distance tiles, one jitted launch). ``device_quant_s``
+  times the int8 upper-bound oracle (``gains(cur, quantize=True)`` —
+  the bound lazy GREEDY re-scores exactly before accepting, so the
+  allocation stays bit-identical). O ∈ {10³, 10⁴} by default;
+  ``PLACEMENT_BENCH_FULL=1`` (the KERNEL_BENCH_FULL-style nightly
+  gate, see scripts/ci.sh) adds the 10⁵ row, where the dense host C_a
+  can no longer exist at all.
 * ``greedy/O…`` — end-to-end GREEDY solve: host lazy heap vs the
   per-step device loop (one jit dispatch per pick — the path that was
   dispatch-bound below ~10³ candidates) vs the scanned device loop
@@ -25,12 +28,16 @@ Rows:
 * ``localswap/O…`` — a 2000-request emulated window: host per-request
   NumPy vs the scanned device window (one ``lax.scan`` launch instead
   of one jitted step per request); serving-equivalence asserted,
-  bit-identity recorded.
+  bit-identity recorded. ``device_s`` is the incremental best-two
+  path (delta re-arm after each accepted swap — the default);
+  ``device_full_s`` keeps the old full O(O·K) rebuild per accept, and
+  the two trajectories are asserted bitwise-equal.
 * ``netduel/O…`` — a 4000-request online NETDUEL window: host f32
   reference vs the device scan. Bit-identical promotions/slots at the
   materialized-C_a size (asserted); the 10⁴ row runs the streamed
   shape-stable pricing; PLACEMENT_BENCH_FULL adds a device-only 10⁵
-  row (no host C_a can exist there).
+  row (no host C_a can exist there). Same ``device_s`` (incremental
+  promotion re-arm) vs ``device_full_s`` (full rebuild) split.
 
 Timings are CPU/interpret-grade (same caveat as kernel_bench.py): the
 point is the host-vs-device *ratio* of the control plane, recorded in
@@ -105,11 +112,17 @@ def run() -> dict:
         cur_dev = jnp.asarray(cur, jnp.float32)
         t_dev = bench_jax(dinst.gains, cur_dev,
                           repeat=3 if n <= 10_000 else 1)
+        t_quant = bench_jax(lambda c: dinst.gains(c, quantize=True),
+                            cur_dev, repeat=3 if n <= 10_000 else 1)
         name = f"gain_oracle/O{n}_J2_D16"
         rows.append({"name": name, "host_s": t_host, "device_s": t_dev,
-                     "speedup": t_host / t_dev})
+                     "device_quant_s": t_quant,
+                     "speedup": t_host / t_dev,
+                     "quant_speedup": t_dev / t_quant})
         csv_line(name, t_dev * 1e6,
-                 f"host_s={t_host:.3f},speedup={t_host/t_dev:.1f}x")
+                 f"host_s={t_host:.3f},speedup={t_host/t_dev:.1f}x,"
+                 f"quant_s={t_quant:.3f}"
+                 f"({t_dev/t_quant:.2f}x vs exact device)")
 
     # end-to-end GREEDY, 128 picks. The per-step device loop is
     # dispatch-bound at 10³ candidates (one jit dispatch per pick); the
@@ -145,22 +158,31 @@ def run() -> dict:
         dsw_step, t_step = timed_warm(device_localswap, dinst,
                                       n_iters=2000, seed=7, tol=tol,
                                       scan=False)
+        dsw_full, t_full = timed_warm(device_localswap, dinst,
+                                      n_iters=2000, seed=7, tol=tol,
+                                      scan=True, incremental=False)
         dsw, t_dl = timed_warm(device_localswap, dinst, n_iters=2000,
                                seed=7, tol=tol, scan=True)
         assert np.array_equal(dsw_step.slots_np, dsw.slots_np), \
             "scanned LOCALSWAP diverged from the per-step device path"
+        assert np.array_equal(dsw_full.slots_np, dsw.slots_np) \
+            and dsw_full.n_swaps == dsw.n_swaps, \
+            "incremental LOCALSWAP diverged from the full-rebuild path"
         equiv, bit = same_placement(inst, hsw.slots, dsw.slots_np)
         assert equiv, "device LOCALSWAP trajectory diverged from host"
         name = f"localswap/O{n}_T2000"
         rows.append({"name": name, "host_s": t_hl,
-                     "device_stepped_s": t_step, "device_s": t_dl,
+                     "device_stepped_s": t_step,
+                     "device_full_s": t_full, "device_s": t_dl,
                      "speedup": t_hl / t_dl,
                      "stepped_speedup": t_step / t_dl,
+                     "incremental_speedup": t_full / t_dl,
                      "n_swaps": int(dsw.n_swaps),
                      "allocations_equal": bit, "serving_equivalent": True})
         csv_line(name, t_dl * 1e6,
                  f"host_s={t_hl:.3f},stepped_s={t_step:.3f},"
-                 f"speedup={t_hl/t_dl:.1f}x,swaps={dsw.n_swaps},"
+                 f"full_s={t_full:.3f},speedup={t_hl/t_dl:.1f}x,"
+                 f"incremental={t_full/t_dl:.2f}x,swaps={dsw.n_swaps},"
                  + ("bit_identical" if bit else "serving_equivalent"))
 
     # NETDUEL: a 4000-request online window in one scan launch. The 10³
@@ -176,9 +198,17 @@ def run() -> dict:
         materialize = n <= 1_000
         dinst = DeviceInstance.from_instance(inst,
                                              materialize_ca=materialize)
+        std_full, t_df = timed_warm(device_netduel, dinst,
+                                    record_events=materialize,
+                                    incremental=False, **kw)
         std, t_dd = timed_warm(device_netduel, dinst,
                                record_events=materialize, **kw)
+        assert np.array_equal(std_full.slots, std.slots) \
+            and std_full.n_promotions == std.n_promotions, \
+            "incremental NETDUEL diverged from the full-rebuild path"
         row = {"name": f"netduel/O{n}_T4000", "device_s": t_dd,
+               "device_full_s": t_df,
+               "incremental_speedup": t_df / t_dd,
                "n_promotions": int(std.n_promotions)}
         if n <= 10_000:
             inst.ca
@@ -195,9 +225,11 @@ def run() -> dict:
                     "device NETDUEL trajectory diverged from host"
                 row["bit_identical"] = True
             derived = f"host_s={t_hd:.3f},speedup={t_hd/t_dd:.1f}x," \
+                      f"incremental={t_df/t_dd:.2f}x," \
                       f"promos={std.n_promotions}"
         else:
-            derived = f"device_only,promos={std.n_promotions}"
+            derived = f"device_only,incremental={t_df/t_dd:.2f}x," \
+                      f"promos={std.n_promotions}"
         rows.append(row)
         csv_line(row["name"], t_dd * 1e6, derived)
 

@@ -40,11 +40,17 @@
 # (tests/test_netduel_device.py::test_netduel_large_window_smoke —
 # slow-marked, device-only: no host C_a can exist at that size) and the
 # 10⁶-object warm-start run (tests/test_warmstart.py::
-# test_warmstart_1e6_objects), and (ii) runs the placement and
+# test_warmstart_1e6_objects), (ii) runs the placement and
 # warm-start benchmarks with their FULL gates open: the 10⁵-candidate
 # gain-oracle row, the 10⁵ device-only NETDUEL window row, and the
 # 10⁶-object warm-start headline (≥10× faster than device-GREEDY at
-# its feasibility frontier, asserted in-bench).
+# its feasibility frontier, asserted in-bench), and (iii) scales the
+# quantized smoke to the 10⁶-key quantized+pruned+sharded differential.
+#
+# The quantized-path smoke (scripts/quantized_smoke.py) runs after each
+# pytest pass: ``lookup(quantize=True, verify=True)`` and its LSH
+# composition must be bit-identical to the exact fused scan — 1-way in
+# pass 1, through a real 8-way mesh after pass 2.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -53,8 +59,14 @@ if [[ "${CI_FULL:-0}" == "1" ]]; then
     MARKER=()
 fi
 python -m pytest -x -q ${MARKER[@]+"${MARKER[@]}"} "$@"
+# quantized-path smoke, 1-way: int8 first-pass lookup bit-identical to
+# the exact fused scan (verify + LSH composition, asserted in-script)
+python scripts/quantized_smoke.py
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q -m "not slow" -k "not _subprocess" "$@"
+# same quantized smoke through a real 8-way request-axis sharding
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python scripts/quantized_smoke.py
 # streaming serving smoke: bucketed-vs-unbucketed speedup, driver rows,
 # and the swap-stall bound are asserted inside the bench itself
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
@@ -68,6 +80,9 @@ PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/graphs_bench.py --smoke
 if [[ "${CI_FULL:-0}" == "1" ]]; then
+    # 10⁶-key quantized+pruned+sharded differential (bitwise, in-script)
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        python scripts/quantized_smoke.py --full
     PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" PLACEMENT_BENCH_FULL=1 \
         python benchmarks/placement_bench.py
     # nightly serving sweep: more distinct sizes, longer driver runs

@@ -1,0 +1,78 @@
+"""Quantized-path CI smoke: the int8 first-pass lookup must be
+bit-identical to the exact fused scan through whatever mesh is visible.
+
+Run from scripts/ci.sh in both passes — 1-way in the default pass, a
+real 8-way request-axis sharding under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — asserting
+
+  * ``lookup(quantize=True, verify=True)`` == exact fused, bitwise;
+  * composed with LSH pruning (gather → int8 sub-cut), still bitwise;
+  * the unverified path stays admissible (cost ≥ exact, ≤ h_repo).
+
+``--full`` (the CI_FULL nightly gate) scales the differential to 10⁶
+keys, quantized + pruned + sharded at once — the headline configuration
+of results/bench/kernels.json, checked for exactness rather than speed.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.simcache import CacheLevel, SimCacheNetwork
+from repro.kernels.knn import SimHashPolicy
+from repro.launch.mesh import make_lookup_mesh
+
+
+def build(levels, sharded: bool, policy=None):
+    kw = dict(sharded=True, mesh=make_lookup_mesh(jax.device_count())) \
+        if sharded else {}
+    return SimCacheNetwork(levels=levels, h_repo=1e9, metric="l2",
+                           candidate_policy=policy, **kw)
+
+
+def assert_bitwise(got, want, label: str):
+    for f in ("level", "slot", "payload", "cost", "approx_cost"):
+        a, b = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert np.array_equal(a, b), f"{label}: field {f} diverged"
+
+
+def main(full: bool) -> None:
+    n = 1_000_000 if full else 20_000
+    d, b = 64, 64
+    rng = np.random.default_rng(0)
+    pol = SimHashPolicy(n_tables=4, n_bits=16 if full else 11,
+                        n_probes=2, max_candidates=16384 if full else 4096)
+    coords = rng.standard_normal((n, d)).astype(np.float32)
+    half = n // 2
+    levels = [CacheLevel(keys=jnp.asarray(coords[:half]),
+                         values=jnp.asarray(
+                             np.arange(half, dtype=np.int32)), h=0.0),
+              CacheLevel(keys=jnp.asarray(coords[half:]),
+                         values=jnp.asarray(
+                             np.arange(half, n, dtype=np.int32)), h=0.5)]
+    net = build(levels, sharded=False)
+    snet = build(levels, sharded=True, policy=pol)
+    q = jnp.asarray(coords[rng.integers(0, n, b)]
+                    + 0.05 * rng.standard_normal((b, d)).astype(np.float32))
+    exact = net._lookup_fused(q)
+    shards = jax.device_count()
+
+    got = snet.lookup(q, quantize=True, verify=True)
+    assert_bitwise(got, exact, f"quantize+verify ({shards}-way)")
+    got = snet.lookup(q, prune="lsh", quantize=True, verify=True)
+    assert_bitwise(got, exact, f"quantize+lsh+verify ({shards}-way)")
+    raw = snet.lookup(q, quantize=True)
+    assert np.all(np.asarray(raw.cost) >= np.asarray(exact.cost))
+    assert np.all(np.asarray(raw.cost) <= 1e9 + 1e-6)
+    print(f"quantized smoke OK: n={n}, {shards}-way mesh, "
+          "verify bitwise + lsh composition + admissibility")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="10⁶-key quantized+pruned+sharded differential")
+    main(ap.parse_args().full)

@@ -282,15 +282,20 @@ def _stable_ca_cols(x, keys, metric: str, gamma: float,
     return jnp.moveaxis(out, 0, 1).reshape(x.shape[0], -1)[:, :K]
 
 
-def _best_two_rows(rows, keys, slots, slot_cache, H, h_repo,
-                   metric: str, gamma: float, has_ca: bool):
-    """best1/arg1/best2 for a block of request rows.
+def _best_two_rows_pre(rows, keys, slots, slot_cache, H,
+                       metric: str, gamma: float, has_ca: bool):
+    """Pre-repo-fold best-two for a block of request rows: (b1, a1, b2,
+    a2), all over *slots only* (the repo escape is folded separately by
+    :func:`_fold_repo_rows`). The slot-index witnesses a1/a2 are what
+    the incremental path (:func:`best_two_delta`) keys its dirty-row
+    detection on — the fold erases a1 when the repo wins, so deltas must
+    carry the pre-fold tables.
 
     ``rows`` is either a (R, O) block of C_a rows (``has_ca``) or the
     (R, D) request coordinates, with ``keys`` the (K, D) slot-key
     coordinates. Rows are independent, which is exactly what lets
-    :func:`sharded_best_two` shard_map this over the request axis with
-    bit-identical per-row results. The coords mode uses the
+    :func:`sharded_best_two_tables` shard_map this over the request axis
+    with bit-identical per-row results. The coords mode uses the
     shape-stable distance form (costs.pairwise_distance_stable), so a
     table entry for pair (r, y) is bitwise the value every other
     incremental op (swap deltas, duel pricing, apply_pick) computes for
@@ -303,15 +308,33 @@ def _best_two_rows(rows, keys, slots, slot_cache, H, h_repo,
         d = _stable_ca_cols(rows, keys, metric, gamma)
     ca_cols = jnp.where(slots[None, :] >= 0, d, jnp.inf)
     c = ca_cols[None, :, :] + H[:, slot_cache][:, None, :]     # (I, R, K)
-    a1 = jnp.argmin(c, axis=2)
+    a1 = jnp.argmin(c, axis=2).astype(jnp.int32)
     b1 = jnp.take_along_axis(c, a1[:, :, None], axis=2)[:, :, 0]
     k_iota = jax.lax.broadcasted_iota(jnp.int32, c.shape, 2)
-    b2 = jnp.min(jnp.where(k_iota == a1[:, :, None], jnp.inf, c), axis=2)
+    masked = jnp.where(k_iota == a1[:, :, None], jnp.inf, c)
+    b2 = jnp.min(masked, axis=2)
+    a2 = jnp.argmin(masked, axis=2).astype(jnp.int32)
+    return b1, a1, b2, a2
+
+
+def _fold_repo_rows(b1, a1, b2, h_repo):
+    """Fold the repo escape (cost h_repo, index -1) into pre-fold slot
+    tables — exactly the historical tail of ``_best_two_rows``, so
+    fold(pre) is bitwise the old fused computation."""
     repo = h_repo[:, None]
     best1 = jnp.minimum(b1, repo)
     arg1 = jnp.where(repo < b1, -1, a1).astype(jnp.int32)
     best2 = jnp.minimum(jnp.where(repo < b1, b1, b2), repo)
     return best1, arg1, best2
+
+
+def _best_two_rows(rows, keys, slots, slot_cache, H, h_repo,
+                   metric: str, gamma: float, has_ca: bool):
+    """best1/arg1/best2 for a block of request rows — pre-fold tables
+    (:func:`_best_two_rows_pre`) with the repo escape folded in."""
+    b1, a1, b2, _ = _best_two_rows_pre(rows, keys, slots, slot_cache, H,
+                                       metric, gamma, has_ca)
+    return _fold_repo_rows(b1, a1, b2, h_repo)
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "gamma", "has_ca"))
@@ -379,6 +402,176 @@ def best_two_refresh(coords, ca, slots, slot_cache, H, h_repo,
                                 mesh, axes, metric, gamma, has_ca)
     return _best_two_device(coords, ca, slots, slot_cache, H, h_repo,
                             metric, gamma, has_ca)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "gamma", "has_ca"))
+def _best_two_tables_device(coords, ca, slots, slot_cache, H,
+                            metric: str, gamma: float, has_ca: bool):
+    rows = ca if has_ca else coords
+    keys = jnp.zeros((0, 0), jnp.float32) if has_ca \
+        else coords[jnp.maximum(slots, 0)]
+    return _best_two_rows_pre(rows, keys, slots, slot_cache, H,
+                              metric, gamma, has_ca)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "gamma", "has_ca",
+                                             "mesh", "axes"))
+def sharded_best_two_tables(coords, ca, slots, slot_cache, H, mesh,
+                            axes: tuple, metric: str, gamma: float,
+                            has_ca: bool):
+    """Mesh-sharded pre-fold tables (b1, a1, b2, a2): the request axis is
+    shard_mapped over ``axes`` exactly like :func:`sharded_best_two`, so
+    per-row results are bit-identical at any shard count."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.knn.ops import _pad_axis, mesh_axes_size
+    n_shards = mesh_axes_size(mesh, axes)
+    n_obj = coords.shape[0] if not has_ca else ca.shape[0]
+    safe = jnp.maximum(slots, 0)
+    if has_ca:
+        rows = _pad_axis(ca, n_shards, 0, "zero")
+        keys = jnp.zeros((0, 0), jnp.float32)
+    else:
+        rows = _pad_axis(coords, n_shards, 0, "zero")
+        keys = coords[safe]
+
+    def shard_fn(rows_s, keys_s, slots_s, slot_cache_s, H_s):
+        return _best_two_rows_pre(rows_s, keys_s, slots_s, slot_cache_s,
+                                  H_s, metric, gamma, has_ca)
+
+    b1, a1, b2, a2 = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(tuple(axes), None), P(), P(), P(), P()),
+        out_specs=(P(None, tuple(axes)),) * 4,
+        check_rep=False)(rows, keys, slots, slot_cache, H)
+    return b1[:, :n_obj], a1[:, :n_obj], b2[:, :n_obj], a2[:, :n_obj]
+
+
+def best_two_tables(coords, ca, slots, slot_cache, H,
+                    metric: str, gamma: float, has_ca: bool,
+                    mesh=None, axes: tuple = ()):
+    """Pre-fold best-two tables (b1, a1, b2, a2) over the slot axis only
+    — the carried state of the incremental refresh path. Post-fold
+    serving tables are ``_fold_repo_rows(b1, a1, b2, h_repo)``, bitwise
+    what :func:`best_two_refresh` returns."""
+    if mesh is not None:
+        return sharded_best_two_tables(coords, ca, slots, slot_cache, H,
+                                       mesh, axes, metric, gamma, has_ca)
+    return _best_two_tables_device(coords, ca, slots, slot_cache, H,
+                                   metric, gamma, has_ca)
+
+
+# Public name for folding pre-fold tables into serving tables.
+fold_best_two = _fold_repo_rows
+
+
+def default_delta_cap(n_obj: int) -> int:
+    """Static dirty-row budget for :func:`best_two_delta`: generous
+    enough that overflow (full rebuild) stays rare along scanned
+    LOCALSWAP/NETDUEL trajectories, small enough that the gathered
+    recompute is a fraction of a rebuild."""
+    return max(64, n_obj // 16)
+
+
+def best_two_delta(coords, ca, b1, a1, b2, a2, slots_new, ys, slot_cache,
+                   H, metric: str, gamma: float, has_ca: bool,
+                   cap: int, mesh=None, axes: tuple = ()):
+    """Incremental pre-fold best-two refresh after slot writes.
+
+    ``ys`` is a (P,) ascending i32 vector of the slot indices whose
+    occupant changed (padded with K = total slots for unused lanes);
+    ``slots_new`` is the post-write layout. Only rows whose current
+    witness (a1 or a2) references a changed slot can need more than a
+    two-candidate insertion: for every other row the changed slots' old
+    costs sat strictly above best2 (or tied with a higher index than the
+    stored witness — argmin keeps the first minimum), so removing them
+    cannot move the tables, and inserting the new costs is an exact
+    two-way merge with the same lowest-slot-index tie-break the full
+    rebuild's argmin applies. Dirty rows are gathered (up to the static
+    ``cap``) and recomputed by the full per-row kernel on the canonical
+    shape-stable C_a, so the result is bitwise the full rebuild's; if
+    more than ``cap`` rows are dirty the whole table is rebuilt
+    (lax.cond — same jitted program either way).
+    """
+    K = int(slot_cache.shape[0])
+    n_obj = ca.shape[0] if has_ca else coords.shape[0]
+    return _best_two_delta_jit(coords, ca, b1, a1, b2, a2, slots_new, ys,
+                               slot_cache, H, metric=metric, gamma=gamma,
+                               has_ca=has_ca, cap=min(cap, n_obj),
+                               n_slots=K, mesh=mesh, axes=tuple(axes))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "metric", "gamma", "has_ca", "cap", "n_slots", "mesh", "axes"))
+def _best_two_delta_jit(coords, ca, b1, a1, b2, a2, slots_new, ys,
+                        slot_cache, H, metric: str, gamma: float,
+                        has_ca: bool, cap: int, n_slots: int,
+                        mesh=None, axes: tuple = ()):
+    from repro.core import costs
+    K = n_slots
+    R = b1.shape[1]
+    n_pend = ys.shape[0]
+    safe_y = jnp.minimum(ys, K - 1)
+    valid_y = ys < K                                          # (P,)
+
+    # Canonical C_a columns for the rewritten slots: same per-pair bits
+    # as the full rebuild's _stable_ca_cols (shape-stable distance form).
+    obj = jnp.maximum(slots_new[safe_y], 0)                   # (P,)
+    if has_ca:
+        cols = ca[:, obj]                                     # (R, P)
+    else:
+        cols = costs.approx_cost_stable(coords, coords[obj], metric, gamma)
+    cols = jnp.where(slots_new[safe_y][None, :] >= 0, cols, jnp.inf)
+    cn_all = cols[None, :, :] + H[:, slot_cache[safe_y]][:, None, :]
+    cn_all = jnp.where(valid_y[None, None, :], cn_all, jnp.inf)  # (I,R,P)
+
+    # Dirty rows: any ORIGINAL witness lands on a changed slot.
+    hit1 = jnp.any((a1[:, :, None] == ys[None, None, :]) & valid_y, -1)
+    hit2 = jnp.any((a2[:, :, None] == ys[None, None, :]) & valid_y, -1)
+    dirty_r = jnp.any(hit1 | hit2, axis=0)                    # (R,)
+    n_dirty = jnp.sum(dirty_r)
+
+    # Two-candidate insertion of each new column, ascending slot order so
+    # ties among the new columns themselves break to the lowest index —
+    # exactly argmin's first-minimum rule. Clean rows end exact; dirty
+    # rows are overwritten below.
+    nb1, na1, nb2, na2 = b1, a1, b2, a2
+    for j in range(n_pend):
+        cn, yj, vj = cn_all[:, :, j], ys[j], valid_y[j]
+        take1 = vj & ((cn < nb1) | ((cn == nb1) & (yj < na1)))
+        take2 = (~take1) & vj & ((cn < nb2) | ((cn == nb2) & (yj < na2)))
+        nb2 = jnp.where(take1, nb1, jnp.where(take2, cn, nb2))
+        na2 = jnp.where(take1, na1,
+                        jnp.where(take2, yj, na2)).astype(jnp.int32)
+        nb1 = jnp.where(take1, cn, nb1)
+        na1 = jnp.where(take1, yj, na1).astype(jnp.int32)
+
+    # Recompute the dirty rows with the full per-row kernel (row
+    # independence + canonical C_a make the subset bitwise the rebuild).
+    ridx = jnp.nonzero(dirty_r, size=cap, fill_value=R)[0].astype(jnp.int32)
+    safe_r = jnp.minimum(ridx, R - 1)
+    keys_new = jnp.zeros((0, 0), jnp.float32) if has_ca \
+        else coords[jnp.maximum(slots_new, 0)]
+    rows_sub = ca[safe_r] if has_ca else coords[safe_r]
+    sb1, sa1, sb2, sa2 = _best_two_rows_pre(
+        rows_sub, keys_new, slots_new, slot_cache, H, metric, gamma, has_ca)
+    nb1 = nb1.at[:, ridx].set(sb1, mode="drop")
+    na1 = na1.at[:, ridx].set(sa1, mode="drop")
+    nb2 = nb2.at[:, ridx].set(sb2, mode="drop")
+    na2 = na2.at[:, ridx].set(sa2, mode="drop")
+
+    def _rebuild(_):
+        if mesh is not None:
+            return sharded_best_two_tables(coords, ca, slots_new,
+                                           slot_cache, H, mesh, axes,
+                                           metric, gamma, has_ca)
+        rows = ca if has_ca else coords
+        return _best_two_rows_pre(rows, keys_new, slots_new, slot_cache,
+                                  H, metric, gamma, has_ca)
+
+    return jax.lax.cond(n_dirty > cap, _rebuild,
+                        lambda _: (nb1, na1, nb2, na2), operand=None)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -453,23 +646,30 @@ class DeviceInstance:
             self.h_repo[:, None], (self.lam.shape[0], self.n_objects)
         ).astype(jnp.float32)
 
-    def gains(self, cur: jax.Array) -> jax.Array:
+    def gains(self, cur: jax.Array, quantize: bool = False) -> jax.Array:
         """(O, J) marginal gains of every candidate — one oracle launch
-        (one per candidate shard when a mesh is configured)."""
+        (one per candidate shard when a mesh is configured). With
+        ``quantize`` the oracle runs the int8 lower-bound distance pass,
+        returning admissible *upper* bounds on every gain — valid lazy
+        priorities, not exact values; callers must re-score before
+        acceptance (``device_greedy`` does, through its stale-entry
+        refresh)."""
         from repro.kernels.knn import (placement_gains,
                                        placement_gains_matrix,
                                        sharded_placement_gains)
         if self.ca is not None:
-            return placement_gains_matrix(self.ca, self.lam, cur, self.H)
+            return placement_gains_matrix(self.ca, self.lam, cur, self.H,
+                                          quantize=quantize)
         if self.mesh is not None and self.n_shards > 1:
             return sharded_placement_gains(
                 self.coords, self.coords, self.lam, cur, self.H,
                 self.mesh, self.axes, metric=self.metric, gamma=self.gamma,
-                use_pallas=self.use_pallas, interpret=self.interpret)
+                use_pallas=self.use_pallas, interpret=self.interpret,
+                quantize=quantize)
         return placement_gains(self.coords, self.coords, self.lam, cur,
                                self.H, metric=self.metric, gamma=self.gamma,
                                use_pallas=self.use_pallas,
-                               interpret=self.interpret)
+                               interpret=self.interpret, quantize=quantize)
 
     def gain_at(self, cur: jax.Array, objs: jax.Array, caches: jax.Array
                 ) -> jax.Array:
@@ -496,6 +696,35 @@ class DeviceInstance:
                                 self.metric, self.gamma, self.ca is not None,
                                 mesh=self.mesh if sharded else None,
                                 axes=self.axes if sharded else ())
+
+    def best_two_tables(self, slots: jax.Array):
+        """Pre-fold (b1, a1, b2, a2) tables over the slot axis — the
+        carried state of the incremental refresh; fold with
+        ``fold_best_two(b1, a1, b2, h_repo)`` for serving tables."""
+        ca = self.ca if self.ca is not None else jnp.zeros((0, 0), jnp.float32)
+        sharded = self.mesh is not None and self.n_shards > 1
+        return best_two_tables(self.coords, ca, jnp.asarray(slots),
+                               self.slot_cache, self.H,
+                               self.metric, self.gamma, self.ca is not None,
+                               mesh=self.mesh if sharded else None,
+                               axes=self.axes if sharded else ())
+
+    def best_two_delta(self, b1, a1, b2, a2, slots_new, ys,
+                       cap: int | None = None):
+        """Incremental pre-fold refresh after writing slots ``ys`` (see
+        :func:`best_two_delta`); bitwise :meth:`best_two_tables` on the
+        new layout."""
+        ca = self.ca if self.ca is not None else jnp.zeros((0, 0), jnp.float32)
+        sharded = self.mesh is not None and self.n_shards > 1
+        if cap is None:
+            cap = default_delta_cap(self.n_objects)
+        return best_two_delta(self.coords, ca, b1, a1, b2, a2,
+                              jnp.asarray(slots_new), jnp.asarray(ys),
+                              self.slot_cache, self.H,
+                              self.metric, self.gamma, self.ca is not None,
+                              cap=cap,
+                              mesh=self.mesh if sharded else None,
+                              axes=self.axes if sharded else ())
 
     def ca_col(self, obj) -> jax.Array:
         """(O,) column C_a[:, obj] as a device array."""

@@ -184,7 +184,8 @@ def _greedy_scan_loop(coords, ca, lam, H, cur, ub, fresh, col_open,
 
 def device_greedy(dinst: DeviceInstance, topk: int = DEFAULT_TOPK,
                   gain_tol: float = GAIN_TOL, scan: bool = True,
-                  verbose: bool = False) -> np.ndarray:
+                  verbose: bool = False,
+                  quantize: bool = False) -> np.ndarray:
     """Batched lazy GREEDY on the device gain oracle; returns the same
     allocation vector as ``greedy(inst)`` (slots left at −1 when no
     candidate has gain above ``gain_tol``).
@@ -193,7 +194,15 @@ def device_greedy(dinst: DeviceInstance, topk: int = DEFAULT_TOPK,
     ``lax.while_loop`` launch after the one full-oracle launch — no
     per-pick host sync, which removes the jit-dispatch bound the
     per-step path (``scan=False``, kept as the differential twin) hits
-    below ~10³ candidates."""
+    below ~10³ candidates.
+
+    ``quantize=True`` seeds the upper-bound table from the int8
+    lower-bound oracle instead of the exact one. Quantized gains are
+    admissible *upper* bounds, so they enter the lazy loop marked stale
+    — every accepted candidate is still re-scored exactly
+    (``_refresh_topk``'s ``gain_at``) before acceptance, which keeps the
+    allocation bit-identical to the exact-seeded run while the seeding
+    launch reads 4× fewer candidate bytes."""
     O, J = dinst.n_objects, dinst.n_caches
     K = int(dinst.host.net.total_slots)
     slot_cache = dinst.host.slot_cache
@@ -201,8 +210,9 @@ def device_greedy(dinst: DeviceInstance, topk: int = DEFAULT_TOPK,
     slots = np.full(K, -1, dtype=np.int64)
 
     cur = dinst.initial_costs()
-    ub = dinst.gains(cur).astype(jnp.float32).ravel()      # exact → fresh
-    fresh = jnp.ones((O * J,), bool)
+    ub = dinst.gains(cur, quantize=quantize).astype(jnp.float32).ravel()
+    # exact seeds are fresh; quantized seeds are stale upper bounds
+    fresh = jnp.full((O * J,), not quantize, bool)
     col_open = jnp.asarray([bool(free[j]) for j in range(J)])
     ca = dinst.ca if dinst.ca is not None else jnp.zeros((0, 0), jnp.float32)
     k = min(topk, O * J)
@@ -273,22 +283,39 @@ def _swap_argmin_device(coords, ca, lam, H, slot_cache, best1, arg1, best2,
 
 @dataclasses.dataclass
 class DeviceSwapState:
-    """Device-resident twin of localswap.SwapState."""
+    """Device-resident twin of localswap.SwapState.
+
+    Carries the *pre-fold* best-two tables (b1p/a1p/b2p/a2p, over the
+    slot axis only) next to the folded serving tables: the pre-fold
+    witnesses are what ``objective.best_two_delta`` keys its dirty-row
+    detection on, so the scanned paths can re-arm incrementally after a
+    swap instead of rebuilding the full (I, O, K) minimum."""
     slots: jax.Array                   # (K,) i32 object ids (no empties)
     best1: jax.Array                   # (I, O)
     arg1: jax.Array                    # (I, O) best slot or −1
     best2: jax.Array                   # (I, O)
+    b1p: jax.Array                     # (I, O) pre-fold best
+    a1p: jax.Array                     # (I, O) pre-fold best slot
+    b2p: jax.Array                     # (I, O) pre-fold second best
+    a2p: jax.Array                     # (I, O) pre-fold second-best slot
     cost_trace: list = dataclasses.field(default_factory=list)
     n_swaps: int = 0
 
     @classmethod
     def init(cls, dinst: DeviceInstance, slots) -> "DeviceSwapState":
+        from repro.core.objective import fold_best_two
         slots = jnp.asarray(slots, jnp.int32)
-        b1, a1, b2 = dinst.best_two(slots)
-        return cls(slots=slots, best1=b1, arg1=a1, best2=b2)
+        b1p, a1p, b2p, a2p = dinst.best_two_tables(slots)
+        b1, a1, b2 = fold_best_two(b1p, a1p, b2p, dinst.h_repo)
+        return cls(slots=slots, best1=b1, arg1=a1, best2=b2,
+                   b1p=b1p, a1p=a1p, b2p=b2p, a2p=a2p)
 
     def refresh(self, dinst: DeviceInstance) -> None:
-        self.best1, self.arg1, self.best2 = dinst.best_two(self.slots)
+        from repro.core.objective import fold_best_two
+        self.b1p, self.a1p, self.b2p, self.a2p = \
+            dinst.best_two_tables(self.slots)
+        self.best1, self.arg1, self.best2 = fold_best_two(
+            self.b1p, self.a1p, self.b2p, dinst.h_repo)
 
     def cost(self, dinst: DeviceInstance) -> float:
         return float(jnp.sum(dinst.lam * self.best1))
@@ -321,23 +348,46 @@ def device_localswap_step(dinst: DeviceInstance, st: DeviceSwapState,
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "gamma", "has_ca",
-                                             "mesh", "axes"))
+                                             "mesh", "axes", "incremental",
+                                             "emit_cost"))
 def _localswap_scan(coords, ca, lam, H, h_repo, slot_cache, carry,
                     objs, ings, tol, metric: str, gamma: float,
-                    has_ca: bool, mesh, axes):
+                    has_ca: bool, mesh, axes, incremental: bool = True,
+                    emit_cost: bool = True):
     """A whole emulated-request window as one ``lax.scan`` launch: each
     step is the per-step path's ``_swap_argmin_device`` + f32 accept
     compare, with an accepted swap re-arming the best1/arg1/best2
-    tables under ``lax.cond`` (request-axis mesh-sharded when the
-    instance carries shard axes). Emits (swapped, C(A)) per step."""
-    from repro.core.objective import best_two_refresh
+    tables under ``lax.cond``. Emits (swapped, C(A)) per step (the cost
+    emit statically gated by ``emit_cost`` — the (I, O) sum per step
+    otherwise dominates once the re-arm is incremental).
 
-    def refresh(slots):
-        return best_two_refresh(coords, ca, slots, slot_cache, H, h_repo,
-                                metric, gamma, has_ca, mesh, axes)
+    ``incremental=True`` (default) re-arms through
+    ``objective.best_two_delta`` on the carried pre-fold tables — only
+    rows whose best-two witness touches the swapped slot are recomputed
+    — and is bit-identical to the full-rebuild re-arm
+    (``incremental=False``, the differential twin, request-axis
+    mesh-sharded when the instance carries shard axes)."""
+    from repro.core.objective import (_best_two_delta_jit,
+                                      _fold_repo_rows, best_two_tables,
+                                      default_delta_cap)
+
+    K = int(slot_cache.shape[0])
+    cap = default_delta_cap(int(lam.shape[1]))
+
+    def rearm(slots_new, y, pre):
+        if incremental:
+            npre = _best_two_delta_jit(
+                coords, ca, *pre, slots_new, y[None].astype(jnp.int32),
+                slot_cache, H, metric=metric, gamma=gamma, has_ca=has_ca,
+                cap=min(cap, int(lam.shape[1])), n_slots=K,
+                mesh=mesh, axes=axes)
+        else:
+            npre = best_two_tables(coords, ca, slots_new, slot_cache, H,
+                                   metric, gamma, has_ca, mesh, axes)
+        return (*npre, *_fold_repo_rows(npre[0], npre[1], npre[2], h_repo))
 
     def step(c, x):
-        slots, best1, arg1, best2, n_swaps = c
+        slots, b1p, a1p, b2p, a2p, best1, arg1, best2, n_swaps = c
         o, i = x
         y, dy = _swap_argmin_device(coords, ca, lam, H, slot_cache,
                                     best1, arg1, best2, o, i,
@@ -345,31 +395,36 @@ def _localswap_scan(coords, ca, lam, H, h_repo, slot_cache, carry,
         do = dy < -tol
         slots = jax.lax.cond(do, lambda s: s.at[y].set(o), lambda s: s,
                              slots)
-        best1, arg1, best2 = jax.lax.cond(
-            do, refresh, lambda _: (best1, arg1, best2), slots)
+        b1p, a1p, b2p, a2p, best1, arg1, best2 = jax.lax.cond(
+            do, lambda _: rearm(slots, y, (b1p, a1p, b2p, a2p)),
+            lambda _: (b1p, a1p, b2p, a2p, best1, arg1, best2), None)
         n_swaps = n_swaps + do.astype(jnp.int32)
-        return (slots, best1, arg1, best2, n_swaps), \
-            (do, jnp.sum(lam * best1))
+        cost = jnp.sum(lam * best1) if emit_cost else jnp.float32(0)
+        return (slots, b1p, a1p, b2p, a2p, best1, arg1, best2, n_swaps), \
+            (do, cost)
 
     return jax.lax.scan(step, carry, (objs, ings))
 
 
 def _run_localswap_scan(dinst: DeviceInstance, st: DeviceSwapState,
-                        objs: np.ndarray, ings: np.ndarray, tol: float):
+                        objs: np.ndarray, ings: np.ndarray, tol: float,
+                        incremental: bool = True, emit_cost: bool = True):
     """Advance a DeviceSwapState through one scanned request window;
     returns the per-step (swapped, cost) traces."""
     ca = dinst.ca if dinst.ca is not None else jnp.zeros((0, 0), jnp.float32)
     mesh = dinst.mesh if dinst.n_shards > 1 else None
     axes = dinst.axes if dinst.n_shards > 1 else ()
-    carry = (jnp.asarray(st.slots, jnp.int32), st.best1, st.arg1, st.best2,
-             jnp.int32(st.n_swaps))
+    carry = (jnp.asarray(st.slots, jnp.int32), st.b1p, st.a1p, st.b2p,
+             st.a2p, st.best1, st.arg1, st.best2, jnp.int32(st.n_swaps))
     carry, (swapped, costs) = _localswap_scan(
         dinst.coords, ca, dinst.lam, dinst.H, dinst.h_repo,
         dinst.slot_cache, carry, jnp.asarray(objs, jnp.int32),
         jnp.asarray(ings, jnp.int32), jnp.float32(tol), dinst.metric,
-        dinst.gamma, dinst.ca is not None, mesh, axes)
-    st.slots, st.best1, st.arg1, st.best2 = carry[:4]
-    st.n_swaps = int(carry[4])
+        dinst.gamma, dinst.ca is not None, mesh, axes,
+        incremental=incremental, emit_cost=emit_cost)
+    (st.slots, st.b1p, st.a1p, st.b2p, st.a2p,
+     st.best1, st.arg1, st.best2) = carry[:8]
+    st.n_swaps = int(carry[8])
     return np.asarray(swapped), np.asarray(costs)
 
 
@@ -377,7 +432,8 @@ def device_localswap(dinst: DeviceInstance, n_iters: int = 20000,
                      seed: int = 0, slots0: np.ndarray | None = None,
                      requests: tuple[np.ndarray, np.ndarray] | None = None,
                      record_every: int = 0, scan: bool = True,
-                     tol: float = SWAP_TOL) -> DeviceSwapState:
+                     tol: float = SWAP_TOL,
+                     incremental: bool = True) -> DeviceSwapState:
     """Off-line LOCALSWAP on device, driven by the same host-sampled
     emulated request stream as ``localswap(inst, …)`` (identical rng →
     identical requests → differential comparability).
@@ -392,7 +448,9 @@ def device_localswap(dinst: DeviceInstance, n_iters: int = 20000,
                                            slots0, requests)
     st = DeviceSwapState.init(dinst, slots)
     if scan:
-        _, costs = _run_localswap_scan(dinst, st, objs, ings, tol)
+        _, costs = _run_localswap_scan(dinst, st, objs, ings, tol,
+                                       incremental=incremental,
+                                       emit_cost=bool(record_every))
         if record_every:
             st.cost_trace = [float(c) for t, c in enumerate(costs)
                              if t % record_every == 0]
@@ -406,7 +464,8 @@ def device_localswap(dinst: DeviceInstance, n_iters: int = 20000,
 
 def device_localswap_polish(dinst: DeviceInstance, slots: np.ndarray,
                             max_passes: int = 50, scan: bool = True,
-                            tol: float = SWAP_TOL) -> DeviceSwapState:
+                            tol: float = SWAP_TOL,
+                            incremental: bool = True) -> DeviceSwapState:
     """Deterministic LOCALSWAP sweep (localswap_polish's device twin):
     round-robin over all requested objects until a full pass makes no
     swap. ``scan=True`` runs each pass as one scan launch (one host
@@ -419,7 +478,8 @@ def device_localswap_polish(dinst: DeviceInstance, slots: np.ndarray,
         ings = np.asarray([i for _, i in active])
         for _ in range(max_passes):
             before = st.n_swaps
-            _run_localswap_scan(dinst, st, objs, ings, tol)
+            _run_localswap_scan(dinst, st, objs, ings, tol,
+                                incremental=incremental, emit_cost=False)
             if st.n_swaps == before:
                 break
         return st

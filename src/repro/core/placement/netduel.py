@@ -186,12 +186,22 @@ class DeviceDuelState:
     cost_trace: list
 
 
+# Static unroll width of the incremental re-arm: a settle step promoting
+# more than this many slots at once falls back to the full rebuild.
+PROMOTE_CAP = 8
+
+
 def _duel_carry(dinst: DeviceInstance, slots: np.ndarray):
-    """Initial scan carry from a host allocation vector."""
+    """Initial scan carry from a host allocation vector. Carries the
+    pre-fold best-two tables (b1p/a1p/b2p/a2p — the witnesses the
+    incremental re-arm's dirty-row detection keys on) next to the folded
+    serving tables."""
+    from repro.core.objective import fold_best_two
     slots_d = jnp.asarray(slots, jnp.int32)
-    b1, a1, b2 = dinst.best_two(slots_d)
+    b1p, a1p, b2p, a2p = dinst.best_two_tables(slots_d)
+    b1, a1, b2 = fold_best_two(b1p, a1p, b2p, dinst.h_repo)
     K = slots_d.shape[0]
-    return (slots_d, b1, a1, b2,
+    return (slots_d, b1p, a1p, b2p, a2p, b1, a1, b2,
             jnp.full((K,), -1, jnp.int32),
             jnp.zeros((K,), jnp.float32),
             jnp.zeros((K,), jnp.float32),
@@ -201,12 +211,12 @@ def _duel_carry(dinst: DeviceInstance, slots: np.ndarray):
 
 @functools.partial(jax.jit, static_argnames=(
     "metric", "gamma", "has_ca", "record_events", "external_b1",
-    "record_every", "mesh", "axes", "masked"))
+    "record_every", "mesh", "axes", "masked", "incremental"))
 def _duel_scan(coords, ca, lam, H, h_repo, slot_cache, h_slots, on_path,
                carry, xs, one_delta, window,
                metric: str, gamma: float, has_ca: bool,
                record_events: bool, external_b1: bool, record_every: int,
-               mesh, axes, masked: bool = False):
+               mesh, axes, masked: bool = False, incremental: bool = True):
     """One launch over a request window: lax.scan of the NETDUEL step.
 
     Per step: price the request against the serving tables (or take the
@@ -226,17 +236,42 @@ def _duel_scan(coords, ca, lam, H, h_repo, slot_cache, h_slots, on_path,
     promotion count, zero emitted cost — so the carry after a padded
     window is bit-identical to the carry after the unpadded one.
     """
-    from repro.core.objective import best_two_refresh
+    from repro.core.objective import (_best_two_delta_jit,
+                                      _fold_repo_rows, best_two_tables,
+                                      default_delta_cap)
     from repro.kernels.knn.gains import duel_virtual_costs
 
     tracecount.bump("duel_scan")
 
-    def refresh(slots):
-        return best_two_refresh(coords, ca, slots, slot_cache, H, h_repo,
-                                metric, gamma, has_ca, mesh, axes)
+    K = int(slot_cache.shape[0])
+    n_obj = int(lam.shape[1])
+    cap = min(default_delta_cap(n_obj), n_obj)
+
+    def full_tables(slots):
+        return best_two_tables(coords, ca, slots, slot_cache, H,
+                               metric, gamma, has_ca, mesh, axes)
+
+    def rearm(slots_new, promote, pre):
+        """Pre-fold + folded tables after a settle wrote ``promote``."""
+        if incremental:
+            ys = jnp.nonzero(promote, size=PROMOTE_CAP,
+                             fill_value=K)[0].astype(jnp.int32)
+            n_p = jnp.sum(promote, dtype=jnp.int32)
+            npre = jax.lax.cond(
+                n_p > PROMOTE_CAP,
+                lambda _: full_tables(slots_new),
+                lambda _: _best_two_delta_jit(
+                    coords, ca, *pre, slots_new, ys, slot_cache, H,
+                    metric=metric, gamma=gamma, has_ca=has_ca, cap=cap,
+                    n_slots=K, mesh=mesh, axes=axes),
+                None)
+        else:
+            npre = full_tables(slots_new)
+        return (*npre, *_fold_repo_rows(npre[0], npre[1], npre[2], h_repo))
 
     def step(c, x):
-        slots, best1, arg1, best2, virt, rs, vs, deadline, n_prom = c
+        (slots, b1p, a1p, b2p, a2p, best1, arg1, best2,
+         virt, rs, vs, deadline, n_prom) = c
         if masked:
             *x, valid = x
         else:
@@ -264,8 +299,9 @@ def _duel_scan(coords, ca, lam, H, h_repo, slot_cache, h_slots, on_path,
         promote = expired & (vs > one_delta * rs) & (vs > 0.0)
         any_p = jnp.any(promote)
         slots = jnp.where(promote, virt, slots)
-        best1, arg1, best2 = jax.lax.cond(
-            any_p, refresh, lambda _: (best1, arg1, best2), slots)
+        b1p, a1p, b2p, a2p, best1, arg1, best2 = jax.lax.cond(
+            any_p, lambda _: rearm(slots, promote, (b1p, a1p, b2p, a2p)),
+            lambda _: (b1p, a1p, b2p, a2p, best1, arg1, best2), None)
         n_prom = n_prom + jnp.sum(promote, dtype=jnp.int32)
         ev = (promote, virt, rs, vs) if record_events else ()
         virt = jnp.where(expired, -1, virt)
@@ -292,8 +328,8 @@ def _duel_scan(coords, ca, lam, H, h_repo, slot_cache, h_slots, on_path,
                 best1),)
         if record_events:
             out += ev
-        return (slots, best1, arg1, best2, virt, rs, vs, deadline,
-                n_prom), out
+        return (slots, b1p, a1p, b2p, a2p, best1, arg1, best2,
+                virt, rs, vs, deadline, n_prom), out
 
     return jax.lax.scan(step, carry, xs)
 
@@ -347,7 +383,8 @@ def device_netduel(dinst: DeviceInstance, n_iters: int = 200000,
                    slots0: np.ndarray | None = None,
                    requests: tuple[np.ndarray, np.ndarray] | None = None,
                    record_every: int = 0,
-                   record_events: bool = False) -> DeviceDuelState:
+                   record_events: bool = False,
+                   incremental: bool = True) -> DeviceDuelState:
     """NETDUEL as one device launch: identical rng consumption to
     :func:`netduel` (same seed → same start slots, requests and draws)
     and bit-identical duel decisions on materialized-C_a instances
@@ -372,7 +409,8 @@ def device_netduel(dinst: DeviceInstance, n_iters: int = 200000,
         dinst.slot_cache, h_slots, on_path, carry, xs,
         jnp.float32(1.0 + delta), jnp.int32(window),
         dinst.metric, dinst.gamma, dinst.ca is not None,
-        record_events, False, record_every, mesh, axes)
+        record_events, False, record_every, mesh, axes,
+        incremental=incremental)
 
     b1_trace = np.asarray(out[0])
     cost_trace = []
@@ -384,7 +422,7 @@ def device_netduel(dinst: DeviceInstance, n_iters: int = 200000,
     events = []
     if record_events:
         events = _events_from_trace(*(np.asarray(o) for o in out[k:k + 4]))
-    (slots_d, _, _, _, virt, rs, vs, deadline, n_prom) = carry
+    (slots_d, _, _, _, _, _, _, _, virt, rs, vs, deadline, n_prom) = carry
     # cumsum accumulates sequentially in f64 — bit-identical to the
     # host's per-step ``served_cost += float(b1)``
     served = float(np.cumsum(b1_trace, dtype=np.float64)[-1]) \
@@ -420,8 +458,10 @@ class DuelPlane:
 
     def __init__(self, dinst: DeviceInstance, slots0: np.ndarray,
                  window: int = 512, delta: float = 0.05,
-                 arm_prob: float = 0.25, seed: int = 0):
+                 arm_prob: float = 0.25, seed: int = 0,
+                 incremental: bool = True):
         self.dinst = dinst
+        self.incremental = bool(incremental)
         self.window = int(window)
         self.one_delta = jnp.float32(1.0 + delta)
         self.arm_prob = float(arm_prob)
@@ -460,10 +500,11 @@ class DuelPlane:
             d.coords, ca, d.lam, d.H, d.h_repo, d.slot_cache, h_slots,
             on_path, self.carry, xs, self.one_delta,
             jnp.int32(self.window), d.metric, d.gamma, d.ca is not None,
-            False, b1_ext is not None, 0, mesh, axes, masked=masked)
+            False, b1_ext is not None, 0, mesh, axes, masked=masked,
+            incremental=self.incremental)
         self.t += n_real
         self.served_cost += float(np.asarray(out[0], np.float64).sum())
-        n_prom = int(self.carry[8])
+        n_prom = int(self.carry[12])
         changed = n_prom > self.n_promotions
         self.n_promotions = n_prom
         return changed

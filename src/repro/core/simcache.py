@@ -59,9 +59,12 @@ import numpy as np
 from repro.kernels.knn import (default_policy, fused_lookup,
                                mesh_axes_size, nearest_approximizer,
                                pad_to_shards, pruned_fused_lookup,
+                               quantized_fused_lookup,
                                sharded_fused_lookup,
                                sharded_pruned_fused_lookup,
+                               sharded_quantized_fused_lookup,
                                stack_shard_tables)
+from repro.kernels.knn.ops import DEFAULT_TOP_T
 
 REPO_LEVEL = -1
 
@@ -296,7 +299,8 @@ class SimCacheNetwork:
         return self._tables[memo_key]
 
     def lookup(self, queries: jax.Array, prune: str | None = None,
-               verify: bool = False) -> LookupResult:
+               verify: bool = False, quantize: bool = False,
+               top_t: int | None = None) -> LookupResult:
         """Serve a batch of query embeddings (B, d) per eq. (1).
 
         Sharded (``sharded=True`` + mesh): one fused kernel per key
@@ -309,9 +313,21 @@ class SimCacheNetwork:
         of the fused/sharded scan; ``verify=True`` re-scans any query
         whose pruned cost reaches the un-scanned-h bound — bit-identical
         to the exact path by construction (kernels/knn/lsh.py).
+        Quantized (``quantize=True``): int8 lower-bound first pass over
+        the (possibly pruned) key rows selects the ``top_t`` candidates
+        per query; only their batch union reaches the exact fused scan.
+        The returned cost is exact for every query whose cost beats the
+        per-query certificate bound; ``verify=True`` re-scans the rest,
+        making the result bit-identical to the exact path by
+        construction (kernels/quant.py admissibility). Composes with
+        ``prune=`` (LSH gather first, quantized cut second) and with
+        sharding.
         """
         if prune is not None:
-            return self._lookup_pruned(queries, prune, verify)
+            return self._lookup_pruned(queries, prune, verify,
+                                       quantize=quantize, top_t=top_t)
+        if quantize:
+            return self._lookup_quantized(queries, verify, top_t)
         if self.sharded:
             return self._lookup_sharded(queries)
         if self.fused:
@@ -340,12 +356,55 @@ class SimCacheNetwork:
         return LookupResult(level=lvl, slot=slot, payload=pay, cost=cost,
                             approx_cost=ca, hit=lvl != REPO_LEVEL)
 
+    def _quant_rows(self, n_shards: int):
+        """Memoized int8 image (quant.QuantizedRows) of the fused
+        (``n_shards == 0``) or sharded key rows — dropped alongside the
+        layouts by :meth:`invalidate_layout`. All-zero padding rows
+        quantize to scale 0.0 (the explicit guard in kernels/quant.py)
+        and stay masked by their valid == 0 flag."""
+        memo_key = ("quant_rows", n_shards)
+        if memo_key not in self._tables:
+            from repro.kernels import quant
+            keys = (self.fused_layout() if n_shards == 0
+                    else self.sharded_layout(n_shards))[0]
+            self._tables[memo_key] = quant.quantize_rows(keys, self.metric)
+        return self._tables[memo_key]
+
+    def _lookup_quantized(self, queries: jax.Array, verify: bool,
+                          top_t: int | None) -> LookupResult:
+        self._check_layout_fresh()
+        if self.fused_layout()[0].shape[0] == 0:   # no keys → repository
+            return self._lookup_fused(queries)
+        tt = DEFAULT_TOP_T if top_t is None else int(top_t)
+        if self.sharded:
+            n = self.n_shards()
+            keys, h_key, meta = self.sharded_layout(n)
+            out = sharded_quantized_fused_lookup(
+                queries, keys, h_key, meta, self._quant_rows(n), self.mesh,
+                self.resolved_shard_axes(), top_t=tt, metric=self.metric,
+                gamma=self.gamma, h_repo=self.h_repo,
+                repo_level=REPO_LEVEL, use_pallas=self.use_pallas)
+        else:
+            keys, h_key, meta = self.fused_layout()
+            out = quantized_fused_lookup(
+                queries, keys, h_key, meta, self._quant_rows(0), top_t=tt,
+                metric=self.metric, gamma=self.gamma, h_repo=self.h_repo,
+                repo_level=REPO_LEVEL, use_pallas=self.use_pallas)
+        cost, ca, lvl, slot, pay, bound = out
+        res = LookupResult(level=lvl, slot=slot, payload=pay, cost=cost,
+                           approx_cost=ca, hit=lvl != REPO_LEVEL)
+        if not verify:
+            return res
+        return self._verify_rescan(queries, res, bound)
+
     def _lookup_pruned(self, queries: jax.Array, prune: str,
-                       verify: bool) -> LookupResult:
+                       verify: bool, quantize: bool = False,
+                       top_t: int | None = None) -> LookupResult:
         policy = self._resolve_policy(prune)
         self._check_layout_fresh()
         if self.fused_layout()[0].shape[0] == 0:   # no keys → repository
             return self._lookup_fused(queries)
+        tt = DEFAULT_TOP_T if top_t is None else int(top_t)
         if self.sharded:
             n = self.n_shards()
             keys, h_key, meta = self.sharded_layout(n)
@@ -356,7 +415,8 @@ class SimCacheNetwork:
                 n_probes=n_probes,
                 cap_union=policy.resolve_cap(keys.shape[0] // n),
                 metric=self.metric, gamma=self.gamma, h_repo=self.h_repo,
-                repo_level=REPO_LEVEL, use_pallas=self.use_pallas)
+                repo_level=REPO_LEVEL, use_pallas=self.use_pallas,
+                quantize=quantize, top_t=tt)
         else:
             keys, h_key, meta = self.fused_layout()
             proj, buckets, n_probes = self._tables_for(policy, 0)
@@ -365,19 +425,30 @@ class SimCacheNetwork:
                 kind=policy.kind, n_probes=n_probes,
                 cap_union=policy.resolve_cap(keys.shape[0]),
                 metric=self.metric, gamma=self.gamma, h_repo=self.h_repo,
-                repo_level=REPO_LEVEL, use_pallas=self.use_pallas)
+                repo_level=REPO_LEVEL, use_pallas=self.use_pallas,
+                quantize=quantize, top_t=tt)
         res = LookupResult(level=lvl, slot=slot, payload=pay, cost=cost,
                            approx_cost=ca, hit=lvl != REPO_LEVEL)
         if not verify:
             return res
-        # verifier: cost < bound proves the pruned winner exact (every
-        # un-scanned valid key costs ≥ bound); anything else — including
-        # exact ties, whose break could prefer an un-scanned lower index
-        # — re-scans through the exact fused/sharded path. Only the
-        # flagged queries re-scan (per-query kernel rows are independent,
-        # so a sub-batch is bitwise the full batch's rows), padded to a
-        # power of two so repeated verify calls reuse a handful of
-        # compiled exact-scan shapes instead of one per flagged count.
+        return self._verify_rescan(queries, res, bound)
+
+    def _verify_rescan(self, queries: jax.Array, res: LookupResult,
+                       bound: jax.Array) -> LookupResult:
+        # verifier: cost < bound proves the pruned/quantized winner exact
+        # (every un-scanned valid key costs ≥ bound); anything else —
+        # including exact ties, whose break could prefer an un-scanned
+        # lower index — re-scans through the exact fused/sharded path.
+        # Only the flagged queries re-scan (per-query kernel rows are
+        # independent, so a sub-batch is bitwise the full batch's rows),
+        # padded to a power of two so repeated verify calls reuse a
+        # handful of compiled exact-scan shapes instead of one per
+        # flagged count. ``bound`` is a scalar for the LSH path (the
+        # un-scanned-h floor) and per-query (B,) for the quantized cut
+        # (each query's top-T certificate) — the broadcast compare covers
+        # both.
+        lvl, slot = res.level, res.slot
+        pay, cost, ca = res.payload, res.cost, res.approx_cost
         idx = np.nonzero(np.asarray(cost >= bound))[0]
         if idx.size == 0:
             return res

@@ -18,6 +18,16 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+# The int8 quantizer lives in kernels/quant.py now — one implementation
+# shared with the compressed first-pass distance path of the lookup and
+# gain kernels (and with an explicit all-zero-row guard: scale 0.0, not
+# the historic denormal 1e-20 floor). Re-exported here so existing
+# gradient-exchange callers and tests keep their import site.
+from repro.kernels.quant import dequantize_int8, quantize_int8
+
+__all__ = ["axis_size", "quantize_int8", "dequantize_int8",
+           "compressed_crosspod_mean"]
+
 
 def axis_size(axis_name: str) -> jax.Array | int:
     """Size of a named mesh axis, from inside shard_map/vmap/pmap.
@@ -30,21 +40,6 @@ def axis_size(axis_name: str) -> jax.Array | int:
     if fn is not None:
         return fn(axis_name)
     return jax.lax.psum(1, axis_name)
-
-
-def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Per-row (trailing dim) symmetric int8 quantization."""
-    xf = x.astype(jnp.float32)
-    if x.ndim == 0:
-        xf = xf[None]
-    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-20)
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
 
 
 def _crosspod_leaf(g: jax.Array, pod_axis: str) -> jax.Array:

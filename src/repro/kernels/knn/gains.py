@@ -50,6 +50,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels import quant
 from repro.kernels.knn.knn import _distance_block
 from repro.kernels.knn.ops import LANE, _on_tpu, _pad_axis, mesh_axes_size
 
@@ -166,25 +167,63 @@ def _gains_tiles_jnp(x, y, lam, cur, hreq, metric: str, gamma: float,
     return jax.lax.map(tile_fn, tiles).reshape(O, hreq.shape[1])
 
 
+def _lb_gains_tiles_jnp(x, yp, lam, cur, hreq, metric: str, gamma: float,
+                        bo: int) -> jax.Array:
+    """Quantized twin of :func:`_gains_tiles_jnp`: per candidate tile the
+    C_a block is replaced by quant.py's *certified lower bound* over the
+    int8 images (requests quantized once, candidate tiles on the fly).
+    lb ≤ C_a elementwise makes every relu slack — hence every gain — an
+    **upper bound** on the exact oracle's, which is exactly the
+    admissible direction lazy GREEDY needs: seed the stale upper bounds
+    with quantized gains, let the top-k refresh re-score candidates
+    exactly before any acceptance, and the picked allocation is
+    bit-identical to the all-exact run (see placement.device_greedy).
+    """
+    qx, sx = quant.quantize_int8(x)
+    xd = quant.dequantize_int8(qx, sx)
+    rx = quant.quant_row_radius(sx[:, 0], x.shape[1], metric)
+    x_sq = jnp.sum(xd * xd, -1) if metric in ("l2", "l2sq") else None
+    O = yp.shape[0]
+    tiles = yp.reshape(O // bo, bo, yp.shape[1])
+
+    def tile_fn(y_t):
+        kq = quant.quantize_rows(y_t, metric)
+        kd = quant.dequantize_int8(kq.q, kq.scale)
+        lb = quant.lb_approx_cost_block(xd, kd, rx, kq.radius, metric,
+                                        gamma, q_sq=x_sq, k_sq=kq.sq_norm)
+        return _fold_tile(lb, lam, cur, hreq)
+
+    return jax.lax.map(tile_fn, tiles).reshape(O, hreq.shape[1])
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "metric", "gamma", "br", "bo", "use_pallas", "interpret"))
+    "metric", "gamma", "br", "bo", "use_pallas", "interpret", "quantize"))
 def placement_gains(x: jax.Array, y: jax.Array, lam: jax.Array,
                     cur: jax.Array, hreq: jax.Array, metric: str = "l2",
                     gamma: float = 1.0, br: int = DEFAULT_BR,
                     bo: int = DEFAULT_BO, use_pallas: bool | None = None,
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None,
+                    quantize: bool = False) -> jax.Array:
     """(O, J) marginal gains of every candidate approximizer (o', j).
 
     x: (R, D) request-object coords; y: (O, D) candidate coords;
     lam, cur: (I, R) per-(ingress, object) rates and current serving
     costs; hreq: (I, J) ingress→cache retrieval costs (+inf allowed:
     mapped to ``H_SENTINEL``). ``use_pallas=None`` → Pallas on TPU,
-    blocked jnp elsewhere.
+    blocked jnp elsewhere. ``quantize=True`` computes certified gain
+    *upper bounds* over int8 images instead (always the blocked jnp
+    path — the compressed tables stream through plain XLA matmuls);
+    see :func:`_lb_gains_tiles_jnp` for the admissibility contract.
     """
     n_obj = y.shape[0]
     hreq = jnp.where(jnp.isfinite(hreq), hreq, H_SENTINEL).astype(jnp.float32)
     lam = lam.astype(jnp.float32)
     cur = cur.astype(jnp.float32)
+    if quantize:
+        yp = _pad_axis(y.astype(jnp.float32), bo, 0, "zero")
+        out = _lb_gains_tiles_jnp(x.astype(jnp.float32), yp, lam, cur,
+                                  hreq, metric, gamma, bo)
+        return out[:n_obj]
     if use_pallas is None:
         use_pallas = _on_tpu()
     if not use_pallas:
@@ -205,20 +244,29 @@ def placement_gains(x: jax.Array, y: jax.Array, lam: jax.Array,
     return out[:, :n_obj].T
 
 
-@functools.partial(jax.jit, static_argnames=("bo",))
+@functools.partial(jax.jit, static_argnames=("bo", "quantize"))
 def placement_gains_matrix(ca: jax.Array, lam: jax.Array, cur: jax.Array,
-                           hreq: jax.Array, bo: int = DEFAULT_BO
-                           ) -> jax.Array:
+                           hreq: jax.Array, bo: int = DEFAULT_BO,
+                           quantize: bool = False) -> jax.Array:
     """Gain oracle over an explicit device-resident C_a matrix.
 
     ca: (R, O) approximation costs C_a[r, o']; lam, cur: (I, R);
     hreq: (I, J). Returns (O, J) f32 — the small-instance twin of
     :func:`placement_gains` for Instances built from a ca_matrix.
+    ``quantize=True`` replaces each C_a row by the certified lower bound
+    of its int8 image, relu(deq − ELEM_ERR·scale) ≤ ca (the per-element
+    error budget of kernels/quant.py, with its safety margin absorbing
+    the subtraction's own f32 rounding), making the returned gains
+    admissible upper bounds exactly like :func:`placement_gains`'s.
     """
     n_obj = ca.shape[1]
     hreq = jnp.where(jnp.isfinite(hreq), hreq, H_SENTINEL).astype(jnp.float32)
     lam = lam.astype(jnp.float32)
     cur = cur.astype(jnp.float32)
+    if quantize:
+        qc, sc = quant.quantize_int8(ca.astype(jnp.float32))
+        ca = jnp.maximum(quant.dequantize_int8(qc, sc)
+                         - quant.ELEM_ERR * sc, 0.0)
     cat = _pad_axis(ca.astype(jnp.float32), bo, 1, "zero").T  # (O_pad, R)
     tiles = cat.reshape(cat.shape[0] // bo, bo, cat.shape[1])
 
@@ -231,14 +279,15 @@ def placement_gains_matrix(ca: jax.Array, lam: jax.Array, cur: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=(
     "mesh", "axes", "metric", "gamma", "br", "bo", "use_pallas",
-    "interpret"))
+    "interpret", "quantize"))
 def sharded_placement_gains(x: jax.Array, y: jax.Array, lam: jax.Array,
                             cur: jax.Array, hreq: jax.Array, mesh,
                             axes: tuple[str, ...], metric: str = "l2",
                             gamma: float = 1.0, br: int = DEFAULT_BR,
                             bo: int = DEFAULT_BO,
                             use_pallas: bool | None = None,
-                            interpret: bool | None = None) -> jax.Array:
+                            interpret: bool | None = None,
+                            quantize: bool = False) -> jax.Array:
     """Mesh-sharded gain oracle: one local oracle launch per candidate
     shard.
 
@@ -259,7 +308,8 @@ def sharded_placement_gains(x: jax.Array, y: jax.Array, lam: jax.Array,
     def shard_fn(xs, ys, lams, curs, hs):
         return placement_gains(xs, ys, lams, curs, hs, metric=metric,
                                gamma=gamma, br=br, bo=bo,
-                               use_pallas=use_pallas, interpret=interpret)
+                               use_pallas=use_pallas, interpret=interpret,
+                               quantize=quantize)
 
     out = shard_map(
         shard_fn, mesh=mesh,

@@ -209,6 +209,75 @@ def sharded_pruned_fused_lookup_ref(queries: jnp.ndarray,
     return (*red, jnp.min(jnp.stack([p[5] for p in parts])))
 
 
+def quantized_fused_lookup_ref(queries: jnp.ndarray, keys: jnp.ndarray,
+                               h_key: jnp.ndarray, meta: jnp.ndarray,
+                               kq=None, top_t: int = 64,
+                               metric: str = "l2", gamma: float = 1.0,
+                               h_repo: float = 0.0, repo_level: int = -1,
+                               fold_repo: bool = True
+                               ) -> tuple[jnp.ndarray, ...]:
+    """Oracle for the compressed-first-pass lookup (ops.
+    quantized_fused_lookup): identical first-pass selection and union
+    gather (shared helpers), but the exact rescore runs through
+    :func:`fused_lookup_ref`. ``kq`` (quant.quantize_rows of ``keys``)
+    is built on the fly when omitted. Returns (cost, approx_cost,
+    level, slot, payload, bound) with the per-query (B,) vT bound.
+    """
+    from repro.kernels import quant
+    from repro.kernels.knn.lsh import (candidate_union,
+                                       gather_candidate_rows)
+    from repro.kernels.knn.ops import _quant_union_cap, _quantized_select
+    nq = queries.shape[0]
+    if keys.shape[0] == 0:
+        out = fused_lookup_ref(queries, keys, h_key, meta, metric=metric,
+                               gamma=gamma, h_repo=h_repo,
+                               repo_level=repo_level, fold_repo=fold_repo)
+        return (*out, jnp.full((nq,), _INF, jnp.float32))
+    if kq is None:
+        kq = quant.quantize_rows(jnp.asarray(keys, jnp.float32), metric)
+    cand, bound = _quantized_select(
+        jnp.asarray(queries, jnp.float32), jnp.asarray(h_key),
+        jnp.asarray(meta)[3, :] > 0, kq, top_t, keys.shape[0], metric,
+        gamma)
+    kept, _ = candidate_union(cand, keys.shape[0],
+                              _quant_union_cap(keys.shape[0], nq, top_t))
+    gk, gh, gm = gather_candidate_rows(jnp.asarray(keys),
+                                       jnp.asarray(h_key),
+                                       jnp.asarray(meta), kept)
+    out = fused_lookup_ref(queries, gk, gh, gm, metric=metric, gamma=gamma,
+                           h_repo=h_repo, repo_level=repo_level,
+                           fold_repo=fold_repo)
+    return (*out, bound)
+
+
+def sharded_quantized_fused_lookup_ref(queries: jnp.ndarray,
+                                       keys: jnp.ndarray,
+                                       h_key: jnp.ndarray,
+                                       meta: jnp.ndarray, n_shards: int,
+                                       top_t: int = 64, metric: str = "l2",
+                                       gamma: float = 1.0,
+                                       h_repo: float = 0.0,
+                                       repo_level: int = -1
+                                       ) -> tuple[jnp.ndarray, ...]:
+    """Mesh-free oracle of ops.sharded_quantized_fused_lookup: chunk the
+    shard-padded key tensor, run the compressed lookup per chunk
+    (``fold_repo=False``; per-row quantization makes the chunked int8
+    image identical to chunking a whole-tensor quantization), reduce
+    with :func:`reduce_shard_minima`, and take the per-query min of the
+    per-shard vT bounds.
+    """
+    keys, h_key, meta = pad_to_shards(keys, h_key, meta, n_shards)
+    S = keys.shape[0] // n_shards
+    parts = [quantized_fused_lookup_ref(
+        queries, keys[s * S:(s + 1) * S], h_key[s * S:(s + 1) * S],
+        meta[:, s * S:(s + 1) * S], top_t=top_t, metric=metric,
+        gamma=gamma, h_repo=h_repo, repo_level=repo_level,
+        fold_repo=False) for s in range(n_shards)]
+    stk = [jnp.stack([p[i] for p in parts]) for i in range(5)]
+    red = reduce_shard_minima(*stk, h_repo=h_repo, repo_level=repo_level)
+    return (*red, jnp.min(jnp.stack([p[5] for p in parts]), axis=0))
+
+
 def sharded_fused_lookup_ref(queries: jnp.ndarray, keys: jnp.ndarray,
                              h_key: jnp.ndarray, meta: jnp.ndarray,
                              n_shards: int, metric: str = "l2",

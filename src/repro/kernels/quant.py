@@ -1,0 +1,201 @@
+"""Shared int8 row quantization + admissible lower-bound distance blocks.
+
+One quantizer for the whole repo: the cross-pod gradient exchange
+(ft/compress.py) and the compressed first-pass distance path of the
+lookup/gain kernels (kernels/knn/{ops,gains}.py) both quantize per-row
+symmetric int8 through :func:`quantize_int8` here.
+
+The first-pass machinery computes *certified lower bounds* on the exact
+distance between the original f32 rows, from their int8 images alone:
+
+    d(q, k)  ≥  d(q~, k~) − r_q − r_k                 (triangle inequality)
+
+where q~ = dequantize(quantize(q)) and r_q ≥ ‖q − q~‖ is a per-row
+radius derived from the quantization scale. Every computational step on
+top of the mathematical inequality is made *directionally safe* against
+f32 rounding with explicit slack factors (standard per-op error bounds,
+inflated 4×), so the chain
+
+    exact C_a(q, k) = d(q, k)^γ ≥ lb_approx_cost(q~, k~)
+
+holds for every pair — which is what makes ``lookup(..., quantize=True,
+verify=True)`` exact *by construction*: a pruned winner whose cost beats
+the lower bound of every un-scanned key provably equals the full-scan
+winner, and the remaining queries are re-scanned through the exact
+kernel (the same admissible-bound machinery LSH ``verify=True`` uses).
+
+Error budget per element (symmetric scale s = amax / 127):
+
+* rounding of x/s to the int8 grid:            ≤ s/2
+* f32 rounding of the division itself:          ≤ 127·eps·s
+* f32 rounding of the dequantized product s·q:  ≤ 127·eps·s
+
+→ |x − x~| ≤ s·(0.5 + 254·eps) < s·ELEM_ERR with ELEM_ERR = 0.5005.
+Row radii follow by norm equivalence: r = ELEM_ERR·s·√D (l2 family),
+r = ELEM_ERR·s·D (l1).
+
+Zero-row guard: a row of exact zeros gets scale **0.0** (and quantizes
+to exact zeros, dequantizes to exact zeros, radius 0 — the bound is
+tight), instead of the historic ``1e-20`` floor that routed zero rows
+through a denormal scale. Sub-denormal rows (amax < 127·F32_TINY) clamp
+the scale to the smallest *normal* f32 so the division never produces
+inf/NaN; the ≤ s/2 rounding bound still holds because the clamped scale
+only grows.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32_TINY = 1.1754944e-38      # smallest normal f32
+F32_EPS = 1.1920929e-07       # f32 machine epsilon
+ELEM_ERR = 0.5005             # per-element |x − x~| ≤ ELEM_ERR·scale
+_SQRT_DEFLATE = 1.0 - 4.0 * F32_EPS
+_POW_DEFLATE = 1.0 - 8.0 * F32_EPS
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row (trailing dim) symmetric int8 quantization.
+
+    Returns (q int8, scale f32 with keepdims). All-zero rows get scale
+    exactly 0.0 (see module docstring); callers can rely on
+    ``dequantize_int8(q, 0.0) == 0`` bit-exactly.
+    """
+    xf = x.astype(jnp.float32)
+    if x.ndim == 0:
+        xf = xf[None]
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0.0,
+                      jnp.maximum(amax / 127.0, F32_TINY), 0.0)
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.clip(jnp.round(xf / safe), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def quant_row_radius(scale: jax.Array, dim: int, metric: str) -> jax.Array:
+    """Per-row radius r ≥ d_metric(x, x~) from the quantization scale.
+
+    ``scale`` is the per-row scale with the trailing keepdim squeezed or
+    not (broadcasts either way); ``dim`` the *unpadded* feature count
+    (zero-padding adds exactly-zero elements with zero error). For the
+    l2 family the radius is in *distance* units (callers of the l2sq
+    metric still subtract it from the un-squared distance).
+    """
+    if metric in ("l2", "l2sq"):
+        return scale * (ELEM_ERR * float(dim) ** 0.5)
+    if metric == "l1":
+        return scale * (ELEM_ERR * float(dim))
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+class QuantizedRows(NamedTuple):
+    """int8 image of a row tensor + everything the lb blocks consume.
+
+    ``deq`` is *not* stored (4× memory win is the point); consumers
+    rematerialize tiles with ``dequantize_int8`` — bit-deterministic,
+    so the precomputed ``sq_norm`` (Σ deq² per row) stays consistent
+    with any tile-local recompute.
+    """
+    q: jax.Array          # (N, D) int8
+    scale: jax.Array      # (N, 1) f32, 0.0 for all-zero rows
+    radius: jax.Array     # (N,)  f32, metric-space error radius
+    sq_norm: jax.Array    # (N,)  f32, Σ dequantized² (l2 family; 0 for l1)
+
+
+def quantize_rows(x: jax.Array, metric: str,
+                  dim: int | None = None) -> QuantizedRows:
+    """Quantize a row tensor and precompute the lb-block side tables.
+
+    ``dim`` overrides the radius dimension when the trailing axis
+    carries zero padding (padded elements quantize exactly → error 0)."""
+    q, scale = quantize_int8(x)
+    radius = quant_row_radius(scale[:, 0], x.shape[-1] if dim is None
+                              else dim, metric)
+    if metric in ("l2", "l2sq"):
+        deq = dequantize_int8(q, scale)
+        sq_norm = jnp.sum(deq * deq, axis=-1)
+    else:
+        sq_norm = jnp.zeros(x.shape[:-1], jnp.float32)
+    return QuantizedRows(q=q, scale=scale, radius=radius, sq_norm=sq_norm)
+
+
+def _dot_slack(dim: int) -> float:
+    """Directed f32 slack factor for the |q|²+|k|²−2q·k contraction:
+    absolute error ≤ _dot_slack(D)·(|q|² + |k|²) — the D-term dot
+    product's Σ|q_i·k_i| ≤ (|q|²+|k|²)/2 bound times D·eps, with the
+    few extra adds/subs and a 4× safety factor folded in."""
+    return 4.0 * (dim + 4.0) * F32_EPS
+
+
+def lb_distance_block(qd: jax.Array, kd: jax.Array,
+                      rq: jax.Array, rk: jax.Array, metric: str,
+                      q_sq: jax.Array | None = None,
+                      k_sq: jax.Array | None = None) -> jax.Array:
+    """(B, K) certified lower bound on d_metric(orig_q, orig_k).
+
+    ``qd``/``kd`` are the *dequantized* f32 rows, ``rq``/``rk`` the
+    per-row radii from :func:`quant_row_radius`. This is the quantized
+    variant of the fused kernel's ``_distance_block`` (same MXU-identity
+    l2 form / broadcast l1 form), minus radii, minus directed f32
+    slack — admissible for every pair by the module-docstring budget.
+    For ``l2sq`` the returned bound is on the *squared* distance,
+    mirroring ``pairwise_distance``'s metric convention.
+    """
+    dim = qd.shape[-1]
+    rpair = rq[:, None] + rk[None, :]
+    if metric in ("l2", "l2sq"):
+        q_sq = jnp.sum(qd * qd, axis=-1) if q_sq is None else q_sq
+        k_sq = jnp.sum(kd * kd, axis=-1) if k_sq is None else k_sq
+        d2 = q_sq[:, None] + k_sq[None, :] - 2.0 * (qd @ kd.T)
+        slack = _dot_slack(dim) * (q_sq[:, None] + k_sq[None, :])
+        d = jnp.sqrt(jnp.maximum(d2 - slack, 0.0)) * _SQRT_DEFLATE
+        lb = jnp.maximum(d - rpair, 0.0)
+        if metric == "l2sq":
+            # fl(lb·lb) ≤ lb²·(1+eps) → one more deflate keeps it under
+            return (lb * lb) * _SQRT_DEFLATE
+        return lb
+    if metric == "l1":
+        d1 = jnp.sum(jnp.abs(qd[:, None, :] - kd[None, :, :]), axis=-1)
+        # non-negative summands → summation error is relative: ≤ D·eps·d1
+        d1 = d1 * (1.0 - 4.0 * dim * F32_EPS)
+        return jnp.maximum(d1 - rpair, 0.0)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def lb_approx_cost_block(qd: jax.Array, kd: jax.Array,
+                         rq: jax.Array, rk: jax.Array, metric: str,
+                         gamma: float,
+                         q_sq: jax.Array | None = None,
+                         k_sq: jax.Array | None = None) -> jax.Array:
+    """(B, K) certified lower bound on C_a = d(orig_q, orig_k)^γ.
+
+    γ ≥ 0 and lb ≥ 0 make x ↦ x^γ monotone, so the power of the
+    distance bound is a cost bound; one deflate absorbs ``jnp.power``'s
+    f32 rounding (pow is within a couple of ulp on every backend here).
+    """
+    lb = lb_distance_block(qd, kd, rq, rk, metric, q_sq=q_sq, k_sq=k_sq)
+    if gamma == 1.0:
+        return lb
+    return jnp.power(lb, gamma) * _POW_DEFLATE
+
+
+def lb_approx_cost_tiles(queries: jax.Array, kq: QuantizedRows,
+                         metric: str, gamma: float, dim: int | None = None
+                         ) -> jax.Array:
+    """(B, K) lower-bound C_a of a query batch against pre-quantized
+    keys, quantizing the queries on the fly. ``dim`` overrides the
+    radius dimension when the trailing axis carries zero padding
+    (zero elements quantize exactly; their error is 0)."""
+    dim = queries.shape[-1] if dim is None else dim
+    qq, qs = quantize_int8(queries)
+    qd = dequantize_int8(qq, qs)
+    rq = quant_row_radius(qs[:, 0], dim, metric)
+    kd = dequantize_int8(kq.q, kq.scale)
+    return lb_approx_cost_block(qd, kd, rq, kq.radius, metric, gamma,
+                                k_sq=kq.sq_norm)

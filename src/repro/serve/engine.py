@@ -178,6 +178,10 @@ class EngineConfig:
     sharded: bool = False         # mesh-sharded keys (needs engine mesh)
     prune: str | None = None      # "lsh" | "kmeans" candidate pre-filter
     verify: bool = False          # exact re-scan past the pruning bound
+    quantize: bool = False        # int8 lower-bound first pass + exact
+    #                               rescoring of the top-T candidates
+    #                               (composes with prune/sharded; with
+    #                               verify=True bit-identical to exact)
     device_placement: bool = True  # device-resident placement control plane
     swap_tol: float = 1e-3        # device LOCALSWAP accept margin (f32-safe
     #                               at calibrated-ms cost scales)
@@ -674,7 +678,8 @@ class SimCacheEngine:
             if bucket:
                 q = _pad_rows(q, bucket_size(n, self.ecfg.min_bucket))
             res = self.simcache.lookup(q, prune=self.ecfg.prune,
-                                       verify=self.ecfg.verify)
+                                       verify=self.ecfg.verify,
+                                       quantize=self.ecfg.quantize)
             # slice the valid prefix before any accounting: padded rows
             # never touch stats, responses, or the demand window
             hits = np.asarray(res.hit)[:n]

@@ -27,7 +27,7 @@ import pytest
 
 from repro.core import catalog, demand, topology
 from repro.core.objective import DeviceInstance, Instance, random_slots
-from repro.core.placement import device_netduel, netduel
+from repro.core.placement import DuelPlane, device_netduel, netduel
 from repro.launch.mesh import make_lookup_mesh
 
 
@@ -194,6 +194,55 @@ def test_never_promoted_window():
     assert st_h.n_promotions == 0
     np.testing.assert_array_equal(st_d.slots, slots0)
     assert np.any(st_d.virt >= 0)                     # armed, just unsettled
+
+
+# ----------------------------------------------------- incremental re-arm
+@pytest.mark.parametrize("name,make", ALL_INSTANCES)
+def test_device_netduel_incremental_bit_identical(name, make):
+    """The delta best-two re-arm after a promotion (``incremental=True``,
+    the default) must be bitwise the full-rebuild path: same slots,
+    same promotion events (time/slot/object/savings), same per-step
+    served costs. The dirty-row recompute and its PROMOTE_CAP overflow
+    fallback are pure batching, never a semantics change."""
+    inst = make()
+    dinst = DeviceInstance.from_instance(inst)
+    kw = dict(n_iters=6000, seed=3, window=400, arm_prob=0.35,
+              record_events=True)
+    st_i = device_netduel(dinst, incremental=True, **kw)
+    st_f = device_netduel(dinst, incremental=False, **kw)
+    assert st_i.n_promotions > 0
+    np.testing.assert_array_equal(st_i.slots, st_f.slots)
+    assert st_i.n_promotions == st_f.n_promotions
+    assert st_i.promotions == st_f.promotions
+    np.testing.assert_array_equal(st_i.virt, st_f.virt)
+    np.testing.assert_array_equal(st_i.deadline, st_f.deadline)
+    np.testing.assert_array_equal(st_i.real_sav, st_f.real_sav)
+    np.testing.assert_array_equal(st_i.virt_sav, st_f.virt_sav)
+    np.testing.assert_array_equal(st_i.b1_trace, st_f.b1_trace)
+    assert st_i.served_cost == st_f.served_cost
+
+
+def test_duelplane_incremental_bit_identical():
+    """DuelPlane's promotion re-arm goes through the same delta path —
+    observing identical batch streams (including a bucketed, padded
+    batch) with incremental on/off must hold slots, promotion counts and
+    served cost in lockstep across every observe()."""
+    inst = zipf_instance(seed=11)
+    dinst = DeviceInstance.from_instance(inst)
+    slots0 = random_slots(inst, np.random.default_rng(2))
+    planes = [DuelPlane(dinst, slots0, window=120, arm_prob=0.6, seed=5,
+                        incremental=inc) for inc in (True, False)]
+    rng = np.random.default_rng(7)
+    for b in range(6):
+        objs, ings = inst.dem.sample(96, rng)
+        n_valid = 96 if b % 2 == 0 else 70        # alternate bucketed
+        for p in planes:
+            p.observe(objs, ings, n_valid=n_valid)
+        pi, pf = planes
+        np.testing.assert_array_equal(pi.slots_np, pf.slots_np)
+        assert pi.n_promotions == pf.n_promotions
+        assert pi.served_cost == pf.served_cost
+    assert planes[0].n_promotions > 0             # a non-trivial stream
 
 
 # ------------------------------------------------------------------- mesh

@@ -11,6 +11,14 @@ The paper's structural claims, checked on randomized instances:
   * LSH/k-means candidate pruning (kernels/knn/lsh.py) — admissibility
     (scanning fewer keys can only raise the winning cost) and the
     verifier contract (``verify=True`` closes the pruning gap to 0);
+  * int8 quantized first pass (kernels/quant.py) — the certified lower
+    bound never exceeds the exact cost on any random catalog/metric/γ,
+    the quantized lookup is admissible the same way pruning is, and
+    ``quantize=True, verify=True`` restores the exact lexicographic
+    winner even when quantized ranks reorder near ties;
+  * incremental best-two delta (core/objective.best_two_delta) — the
+    scanned LOCALSWAP trajectory with delta re-arms is bit-identical to
+    the full-rebuild trajectory on every random instance;
   * §5 NETDUEL — a promotion never increases the cost measured on the
     duel's own window requests (the settle rule's defining guarantee);
   * scanned device control plane — the single-launch while_loop/scan
@@ -184,6 +192,129 @@ def test_pruned_verify_closes_gap(seed, prune):
         np.testing.assert_array_equal(
             np.asarray(getattr(res, name)),
             np.asarray(getattr(exact, name)), err_msg=name)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       metric=st.sampled_from(["l2", "l2sq", "l1"]),
+       gamma=st.sampled_from([0.7, 1.0, 2.0]))
+def test_quantized_bound_never_exceeds_exact_cost(seed, metric, gamma):
+    """Admissibility of the raw lb machinery: for every random catalog,
+    metric and γ the certified int8 lower bound on C_a is ≤ the exact
+    f32 cost for *every* pair — the property that makes the quantized
+    first pass safe to prune with."""
+    from repro.core import costs
+    from repro.kernels import quant
+    rng = np.random.default_rng(seed)
+    scale = float(10.0 ** rng.uniform(-2, 2))
+    keys = jnp.asarray(rng.standard_normal((70, 5)).astype(np.float32)
+                       * scale)
+    q = jnp.asarray(rng.standard_normal((24, 5)).astype(np.float32)
+                    * scale)
+    kq = quant.quantize_rows(keys, metric)
+    lb = np.asarray(quant.lb_approx_cost_tiles(q, kq, metric, gamma))
+    exact = np.asarray(costs.approx_cost(q, keys, metric, gamma))
+    assert np.all(lb <= exact), (lb - exact).max()
+    assert np.all(lb >= 0.0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), top_t=st.sampled_from([1, 4, 16]))
+def test_quantized_lookup_cost_admissible(seed, top_t):
+    """The quantized first pass scans int8 lower bounds and re-scores
+    only its top-T candidates exactly, so — like LSH pruning — its
+    winning cost is ≥ the exact fused cost and ≤ h_repo for every query
+    of every sampled placement/batch."""
+    net, q = _sampled_placement_net(seed)
+    got = net.lookup(q, quantize=True, top_t=top_t)
+    exact = net._lookup_fused(q)
+    assert np.all(np.asarray(got.cost) >= np.asarray(exact.cost))
+    assert np.all(np.asarray(got.cost) <= net.h_repo + 1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), top_t=st.sampled_from([1, 4, 16]))
+def test_quantized_verify_closes_gap(seed, top_t):
+    """``quantize=True, verify=True`` is exact by construction: queries
+    whose winning cost ≥ the per-query certificate are re-scanned
+    through the exact kernel, so every field is bit-identical to the
+    exact fused path even at top_t=1."""
+    net, q = _sampled_placement_net(seed)
+    res = net.lookup(q, quantize=True, verify=True, top_t=top_t)
+    exact = net._lookup_fused(q)
+    for name in ("level", "slot", "payload", "cost", "approx_cost"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res, name)),
+            np.asarray(getattr(exact, name)), err_msg=name)
+
+
+def test_quantized_near_tie_rescoring_restores_winner():
+    """Near-tie regression: a photo-finish cluster whose true cost gaps
+    (~1e-4) sit far below int8 resolution at the working scale, so the
+    quantized lower-bound ranks *actually reorder* the finish (asserted
+    — the unverified top_t=1 winner is the wrong key). verify=True must
+    restore the exact lexicographic winner bitwise."""
+    rng = np.random.default_rng(0)
+    dim = 6
+    base = rng.standard_normal(dim).astype(np.float32) * 3
+    # 12 keys at distance ≈5 from the probe with tiny gaps — 5 ≫ the
+    # quantization radii, so the lb's don't clamp to 0 and the int8
+    # rank order is decided by rounding noise, not by the true gaps
+    dirs = rng.standard_normal((12, dim)).astype(np.float32)
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    gaps = (rng.random(12) * 3e-4).astype(np.float32)
+    keys = base + dirs * (5.0 + gaps)[:, None]
+    far = rng.standard_normal((30, dim)).astype(np.float32) * 8 + 30
+    coords = np.concatenate([keys, far]).astype(np.float32)
+    slots = np.arange(coords.shape[0]).astype(np.int64)
+    slot_cache = np.zeros(coords.shape[0], np.int64)
+    net = SimCacheNetwork.from_placement(coords, slots, slot_cache,
+                                         hs=[0.0], h_repo=100.0,
+                                         metric="l2")
+    q = jnp.asarray(base[None])
+    exact = net._lookup_fused(q)
+    unverified = net.lookup(q, quantize=True, top_t=1)
+    assert int(np.asarray(unverified.slot)[0]) != \
+        int(np.asarray(exact.slot)[0])            # ranks really reorder
+    res = net.lookup(q, quantize=True, verify=True, top_t=1)
+    for name in ("level", "slot", "payload", "cost", "approx_cost"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res, name)),
+            np.asarray(getattr(exact, name)), err_msg=name)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_localswap_incremental_bit_identical(seed):
+    """Delta best-two re-arm == full rebuild along the whole scanned
+    LOCALSWAP trajectory, on every random instance (cap overflow inside
+    the scan falls back to the rebuild branch, so this also covers the
+    lax.cond seam)."""
+    inst = make_random_instance(seed, n_obj=8, k=(2, 2), metric="l2")
+    dinst = DeviceInstance.from_instance(inst)
+    a = device_localswap(dinst, n_iters=250, seed=seed, incremental=True)
+    b = device_localswap(dinst, n_iters=250, seed=seed, incremental=False)
+    np.testing.assert_array_equal(a.slots_np, b.slots_np)
+    assert a.n_swaps == b.n_swaps
+    for name in ("best1", "arg1", "best2"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, name)),
+                                      np.asarray(getattr(b, name)))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_quantized_gains_upper_bound_and_greedy_identical(seed):
+    """The quantized gain oracle returns *upper* bounds (lower-bound
+    C_a ⇒ upper-bound gain), so lazy GREEDY's exact re-scoring before
+    acceptance keeps the allocation bit-identical to the exact oracle."""
+    inst = make_random_instance(seed, n_obj=7, k=(2, 3), metric="l2")
+    dinst = DeviceInstance.from_instance(inst)
+    cur = dinst.initial_costs()
+    g_exact = np.asarray(dinst.gains(cur))
+    g_q = np.asarray(dinst.gains(cur, quantize=True))
+    assert np.all(g_q >= g_exact - 0.0)          # admissible upper bound
+    np.testing.assert_array_equal(device_greedy(dinst, quantize=True),
+                                  device_greedy(dinst))
 
 
 @settings(max_examples=8, deadline=None)
