@@ -17,14 +17,14 @@ def main() -> None:
                     help="paper-scale sizes (L=100, 10k items; slow)")
     ap.add_argument("--only", default="",
                     help="comma list: fig3,fig4,fig56,fig78,kernels,"
-                         "roofline,serving,warmstart,graphs")
+                         "roofline,serving,warmstart,graphs,hitrate")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig3_tandem, fig4_allocations,
                             fig56_both_arrivals, fig78_trace, graphs_bench,
-                            kernel_bench, roofline_table, serving_bench,
-                            warmstart_bench)
+                            hitrate_bench, kernel_bench, roofline_table,
+                            serving_bench, warmstart_bench)
 
     t0 = time.time()
     checks: dict = {}
@@ -60,6 +60,11 @@ def main() -> None:
         # general-graph scenarios: paper-GREEDY vs on-path LRU routing
         # strategies; the repo-baseline check is asserted in-bench
         checks["graphs"] = graphs_bench.run(smoke=not args.full)["checks"]
+    if want("hitrate"):
+        # analytic Che predictions vs measured SIM/RND-LRU replays; the
+        # ≤5%-absolute Zipf bound (+ the HITRATE_BENCH_FULL=1 10⁶-object
+        # LSH path) is asserted in-bench
+        checks["hitrate"] = hitrate_bench.run(smoke=not args.full)["checks"]
 
     print(f"\n== paper-claim checks ({time.time()-t0:.0f}s) ==")
     n_fail = 0

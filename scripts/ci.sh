@@ -79,6 +79,10 @@ PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
 # three graph families — the repo-baseline check is asserted in-bench
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/graphs_bench.py --smoke
+# analytic hit-rate smoke: Che predictions vs measured SIM/RND-LRU
+# replays — the ≤5%-absolute Zipf bound is asserted in-bench
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/hitrate_bench.py --smoke
 if [[ "${CI_FULL:-0}" == "1" ]]; then
     # 10⁶-key quantized+pruned+sharded differential (bitwise, in-script)
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
@@ -94,4 +98,7 @@ if [[ "${CI_FULL:-0}" == "1" ]]; then
     # full general-graph sweep: 4k objects, 40k-request traces
     PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" GRAPHS_BENCH_FULL=1 \
         python benchmarks/graphs_bench.py
+    # 10⁶-object analytic path: LSH ball enumeration + the Che solve
+    PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" HITRATE_BENCH_FULL=1 \
+        python benchmarks/hitrate_bench.py
 fi

@@ -1,0 +1,9 @@
+from repro.core.analysis.hitrate import (HitRatePrediction, SimilarityBalls,
+                                         exact_hit_balls, predict_hitrates,
+                                         similarity_balls,
+                                         solve_characteristic_time,
+                                         surrogate_cost)
+
+__all__ = ["SimilarityBalls", "HitRatePrediction", "similarity_balls",
+           "exact_hit_balls", "solve_characteristic_time",
+           "predict_hitrates", "surrogate_cost"]

@@ -1,0 +1,611 @@
+"""Analytic hit-rate plane: the Che characteristic-time approximation
+generalized to *similarity* caches, composed along forwarding paths.
+
+Every hit-rate number the repo had so far came from simulation — a full
+trace replay through ``core/routing.StrategyPlane`` or the serving
+engine. This module predicts the same quantities in closed form (one
+vectorized fixed point, milliseconds even at 10⁶ objects), following
+"Computing the Hit Rate of Similarity Caching" (arXiv 2209.03174) and
+the classic Che/TTL toolbox (Icarus ``tools/cacheperf.py``):
+
+**Classic Che (one LRU cache).** Under IRM demand λ, a cache of
+capacity ``C`` behaves as if every content were cached for a fixed
+*characteristic time* T after its last request: the occupancy
+probability is π_o = 1 − exp(−λ_o·T) and T solves Σ_o π_o = C.
+
+**Similarity generalization (SIM-LRU / RND-LRU).** A stored key o
+serves any request o′ in its *similarity ball* B(o) = {o′ :
+C_a(o, o′) ≤ θ} — with probability q_{o′o} = 1 for SIM-LRU and
+q_{o′o} = clamp(1 − C_a/θ, 0, 1) for RND-LRU. Two changes fall out:
+
+* *timer resets are exclusive*: a stored key's LRU position is
+  refreshed only by the requests it actually SERVES, and serving picks
+  the nearest cached ball member that answers. With each ball sorted
+  ascending by C_a and cache-state independence across objects (the
+  Che ansatz), request o′ is served by member m with probability
+  s_m = π_m·q_m·Π_{l<m}(1 − π_l·q_l), so the reset rate of a stored
+  key o is λ̃_o = Σ_{o′: o∈B(o′)} R(o′)·q·Π_{nearer l}(1 − π_l·q_l).
+  (The simpler aggregate λ̃_o = Σ q·R credits one request as a reset
+  to every cached member at once and under-predicts SIM-LRU badly as
+  soon as balls overlap; for SIM-LRU a miss also re-inserts the exact
+  object on the whole path, which the q=1 self term carries.)
+* *hits are unions*: o′ hits if ANY ball member is cached and answers,
+  h_{o′} = Σ_m s_m = 1 − Π_{o∈B(o′)} (1 − π_o·q_{o′o}).
+
+The characteristic-time constraint Σ_o π_o = C is kept per cache and
+closes the fixed point: occupancies π = 1 − e^{−λ̃·T_C} feed the serve
+shares, which feed the reset rates, which re-solve T_C.
+
+**Network composition.** Caches are composed along the same
+per-ingress forwarding paths ``core/routing.py`` serves (finite
+``H[i, ·]`` entries in ascending reach-cost order): the cache at path
+position p sees the *miss stream* of the positions before it,
+R_{i,p}(o) = λ_i(o)·Π_{p′<p}(1 − h_{i,p′}(o)) — the standard
+multi-cache (a-NET) thinning — and a cache shared by several ingresses
+sums their thinned streams. Eligibility mirrors ``serve_one``: a hit
+at cache j for ingress i additionally needs C_a < h_repo[i] − H[i, j],
+so each (ingress, cache) pair prunes the ball at its repo-cost slack.
+The whole system is solved by damped fixed-point sweeps.
+
+**Validity regime.** The approximation is accurate when (Che) demand
+is IRM with many objects relative to cache size, and (similarity) the
+balls are small relative to cache capacity with moderate overlap — the
+regime the validation bench (benchmarks/hitrate_bench.py) pins: on
+Zipf demand over the PR 8 graph families the predicted SIM-LRU /
+RND-LRU hit rates track measured ``StrategyPlane`` replays within the
+tolerance recorded in results/bench/hitrate.json (≤ 5% absolute).
+Known biases outside it: large overlapping balls overestimate the
+reset aggregate (T compensates only on average), and serving in
+``routing.py`` picks the cost-*minimizing* on-path cache while the
+model serves at the first eligible position — they agree exactly for
+exact-hit (θ=0) demand and diverge slowly with θ.
+
+**Ball enumeration.** Balls are enumerated either exactly (blocked
+O×O distance pass — fine to ~10⁴ objects) or through the existing LSH
+candidate machinery of ``kernels/knn/lsh.py`` (PR 3): per-object
+candidates from SimHash multi-probe tables, exact C_a filter on the
+candidates only — sublinear per object, which is what makes the 10⁶
+object path feasible (the HITRATE_BENCH_FULL gate). LSH enumeration
+can miss ball members (recall < 1); ``SimilarityBalls.mean_size`` /
+``truncated`` report what was kept.
+
+The serving engine uses the same plane as a *surrogate cost oracle*
+(``surrogate_cost``): ``serve/engine.request_refresh`` prices the
+observed-demand drift analytically (exact-hit balls — the θ=0 model is
+demand-shape-only and needs no geometry) and skips the full device
+placement solve when the predicted cost moved less than
+``EngineConfig.refresh_min_gain``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costs
+from repro.core.topology import CacheNetwork
+
+__all__ = ["SimilarityBalls", "HitRatePrediction", "similarity_balls",
+           "exact_hit_balls", "solve_characteristic_time",
+           "predict_hitrates", "surrogate_cost"]
+
+
+# ======================================================================
+# similarity balls
+# ======================================================================
+@dataclasses.dataclass(frozen=True)
+class SimilarityBalls:
+    """Padded neighbor structure of one catalog at one threshold θ.
+
+    ``idx[o]`` holds the objects o′ with C_a(o, o′) ≤ θ (always
+    including o itself, first), padded with ``n_objects``; ``q`` is the
+    serve-probability weight q_{o′o} (SIM-LRU: 1 inside the ball;
+    RND-LRU: 1 − C_a/θ), exactly 0 on padding; ``dist`` the C_a values
+    (0 on padding). C_a is symmetric, so one structure serves both
+    directions: "who can serve o" and "whom o refreshes".
+    """
+    idx: np.ndarray           # (O, M) int32, padded with n_objects
+    q: np.ndarray             # (O, M) f32, 0 on padding
+    dist: np.ndarray          # (O, M) f32 C_a, 0 on padding
+    n_objects: int
+    theta: float
+    truncated: int = 0        # members dropped by max_ball
+
+    @property
+    def max_size(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return (self.q > 0.0).sum(axis=1)
+
+    @property
+    def mean_size(self) -> float:
+        return float(self.sizes.mean())
+
+
+def exact_hit_balls(n_objects: int) -> SimilarityBalls:
+    """The degenerate θ=0 structure: every ball is {o} with q=1 — the
+    classic Che model, no geometry needed (the engine surrogate's
+    default)."""
+    idx = np.arange(n_objects, dtype=np.int32)[:, None]
+    return SimilarityBalls(idx=idx,
+                           q=np.ones((n_objects, 1), np.float32),
+                           dist=np.zeros((n_objects, 1), np.float32),
+                           n_objects=n_objects, theta=0.0)
+
+
+def _q_weights(dist: np.ndarray, theta: float, q_mode: str) -> np.ndarray:
+    if q_mode == "hard":                       # SIM-LRU admission
+        return (dist <= theta).astype(np.float32)
+    if q_mode == "rnd":                        # RND-LRU serve probability
+        return np.clip(1.0 - dist / max(theta, 1e-300), 0.0, 1.0) \
+            .astype(np.float32)
+    raise ValueError(f"unknown q_mode {q_mode!r} (expected 'hard'|'rnd')")
+
+
+def _pack_rows(rows_idx: list, rows_d: list, n: int, theta: float,
+               q_mode: str, max_ball: int | None) -> SimilarityBalls:
+    """Pad per-object (indices, distances) lists into the rectangular
+    structure; each row keeps its nearest ``max_ball`` members (self
+    first, then ascending C_a — truncation drops the farthest, i.e. the
+    lowest-q members first)."""
+    sizes = np.fromiter((len(r) for r in rows_idx), np.int64, n)
+    m = int(sizes.max()) if n else 1
+    truncated = 0
+    if max_ball is not None and m > max_ball:
+        truncated = int(np.maximum(sizes - max_ball, 0).sum())
+        m = max_ball
+    m = max(m, 1)
+    idx = np.full((n, m), n, np.int32)
+    dist = np.zeros((n, m), np.float32)
+    for o in range(n):
+        ri = np.asarray(rows_idx[o], np.int32)
+        rd = np.asarray(rows_d[o], np.float32)
+        order = np.argsort(rd, kind="stable")       # self (d=0, first) stays
+        ri, rd = ri[order][:m], rd[order][:m]
+        idx[o, :ri.size] = ri
+        dist[o, :ri.size] = rd
+    q = _q_weights(dist, theta, q_mode)
+    q[idx >= n] = 0.0
+    return SimilarityBalls(idx=idx, q=q, dist=dist, n_objects=n,
+                           theta=float(theta), truncated=truncated)
+
+
+def _block_ca_np(x: np.ndarray, y: np.ndarray, metric: str,
+                 gamma: float) -> np.ndarray:
+    """(B, O) exact C_a in host f64 via direct differences — the same
+    arithmetic as ``routing.StrategyPlane._ca``, NOT the MXU Gram form
+    of ``costs.approx_cost_np`` whose |x|²+|y|²−2x·y cancellation
+    carries ~|x|²·eps absolute noise (a nonzero self-distance would
+    corrupt every ball at small θ)."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    out = np.empty((x.shape[0], y.shape[0]), np.float64)
+    for s in range(0, y.shape[0], 2048):       # bound the (B, Y, D) temp
+        ys = y[s:s + 2048]
+        if metric == "l1":
+            d = np.abs(x[:, None, :] - ys[None, :, :]).sum(axis=-1)
+        elif metric in ("l2", "l2sq"):
+            d2 = ((x[:, None, :] - ys[None, :, :]) ** 2).sum(axis=-1)
+            d = d2 if metric == "l2sq" else np.sqrt(d2)
+        else:
+            raise ValueError(f"unknown metric {metric!r}; "
+                             f"expected one of {costs.METRICS}")
+        out[:, s:s + 2048] = d if gamma == 1.0 else d ** gamma
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "gamma"))
+def _cand_ca(qs: jax.Array, cs: jax.Array, metric: str,
+             gamma: float) -> jax.Array:
+    """(B, P) exact C_a between query rows and their gathered candidate
+    coordinate rows (the LSH path's exact filter)."""
+    if metric == "l1":
+        d = jnp.sum(jnp.abs(cs - qs[:, None, :]), axis=-1)
+    else:
+        d2 = jnp.sum((cs - qs[:, None, :]) ** 2, axis=-1)
+        d = d2 if metric == "l2sq" else jnp.sqrt(d2)
+    return d if gamma == 1.0 else d ** gamma
+
+
+def similarity_balls(coords: np.ndarray, theta: float, metric: str = "l2",
+                     gamma: float = 1.0, q_mode: str = "hard",
+                     mode: str = "auto", policy=None, block: int = 1024,
+                     max_ball: int | None = None,
+                     seed: int = 0) -> SimilarityBalls:
+    """Enumerate B(o) = {o′ : C_a(o, o′) ≤ θ} for every catalog object.
+
+    ``mode='exact'`` runs a blocked O×O distance pass (exhaustive —
+    right up to ~10⁴ objects); ``mode='lsh'`` routes each block through
+    a :class:`~repro.kernels.knn.lsh.SimHashPolicy` candidate matrix
+    and exact-filters only the candidates — sublinear per object, the
+    10⁶-key path. ``mode='auto'`` picks exact below 2·10⁴ objects.
+    ``q_mode`` sets the stored weights: 'hard' (SIM-LRU indicator) or
+    'rnd' (RND-LRU 1 − C_a/θ). θ ≤ 0 degenerates to exact-hit balls.
+    """
+    coords = np.asarray(coords, np.float32)
+    n = coords.shape[0]
+    if theta is None or theta <= 0.0:
+        return exact_hit_balls(n)
+    if mode == "auto":
+        mode = "exact" if n <= 20_000 else "lsh"
+
+    rows_idx: list = [None] * n
+    rows_d: list = [None] * n
+    if mode == "exact":
+        for s in range(0, n, block):
+            ca = _block_ca_np(coords[s:s + block], coords, metric, gamma)
+            for b in range(ca.shape[0]):
+                keep = np.nonzero(ca[b] <= theta)[0]
+                rows_idx[s + b] = keep
+                rows_d[s + b] = ca[b, keep]
+    elif mode == "lsh":
+        from repro.kernels.knn import lsh as lsh_api
+        if policy is None:
+            policy = lsh_api.SimHashPolicy(seed=seed)
+        tables = policy.build(coords, np.ones(n, bool))
+        proj = jnp.asarray(tables.proj)
+        buckets = jnp.asarray(tables.buckets)
+        cj = jnp.asarray(coords)
+        for s in range(0, n, block):
+            qs = cj[s:s + block]
+            cand = lsh_api.candidate_matrix(tables.kind, proj, buckets,
+                                            qs, tables.n_probes)
+            safe = jnp.where(cand >= 0, cand, 0)
+            ca = _cand_ca(qs, cj[safe], metric, gamma)
+            ca = np.asarray(jnp.where(cand >= 0, ca, np.inf))
+            cand = np.asarray(cand)
+            for b in range(ca.shape[0]):
+                o = s + b
+                keep = np.nonzero(ca[b] <= theta)[0]
+                ci, cd = cand[b, keep], ca[b, keep]
+                ci, u = np.unique(ci, return_index=True)
+                cd = cd[u]
+                if o not in ci:                 # self is always a member
+                    ci = np.concatenate([[o], ci])
+                    cd = np.concatenate([[0.0], cd])
+                else:
+                    cd[ci == o] = 0.0
+                rows_idx[o], rows_d[o] = ci, cd
+    else:
+        raise ValueError(f"unknown mode {mode!r} "
+                         "(expected 'exact'|'lsh'|'auto')")
+    return _pack_rows(rows_idx, rows_d, n, theta, q_mode, max_ball)
+
+
+# ======================================================================
+# characteristic-time solver
+# ======================================================================
+def _occupancy_np(mu: np.ndarray, nu: np.ndarray, T: float) -> np.ndarray:
+    """Host f64 stationary occupancy of the two-rate renewal model:
+
+        π = expm1(μT) / (expm1(μT) + μ/ν)
+
+    — a key enters at rate ν when absent (a global path miss inserts
+    it) and is evicted T after its last *serve* (rate μ while present);
+    E[busy] = (e^{μT} − 1)/μ against E[idle] = 1/ν gives the form
+    above, which is EXACTLY classic Che π = 1 − e^{−λT} when μ = ν = λ
+    (plain LRU: every request both inserts and refreshes).
+    """
+    mu = np.maximum(np.asarray(mu, np.float64), 1e-300)
+    nu = np.asarray(nu, np.float64)
+    if not np.isfinite(T):
+        return (nu > 0.0).astype(np.float64)
+    em = np.expm1(np.minimum(mu * T, 700.0))
+    pi = em / (em + mu / np.maximum(nu, 1e-300))
+    return np.where(nu > 0.0, pi, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters",))
+def _solve_tc(mu: jax.Array, nu: jax.Array, capacity: jax.Array,
+              n_iters: int = 64) -> jax.Array:
+    """Vectorized Che fixed point: the largest T with Σ_o π_o(T) ≤ C
+    per cache row, for the two-rate occupancy of :func:`_occupancy_np`
+    (μ = refresh rate while present, ν = entry rate while absent;
+    μ = ν recovers the classic Σ (1 − e^{−λT}) = C).
+
+    ``mu``/``nu`` are (J, O), ``capacity`` (J,); runs in the ambient
+    jnp float dtype (f32 unless x64 is enabled — plenty for a capacity
+    constraint, and the host-side composition stays f64). Σπ(T) is
+    monotone increasing from 0 to the number of ν-positive objects, so
+    bisection after doubling brackets the root; a capacity at or above
+    that count has no finite root and returns +inf (π → 1 for every
+    entering object — the cache holds everything it ever sees).
+    """
+    ftype = jnp.result_type(float)
+    mu = jnp.maximum(mu.astype(ftype), 1e-30)
+    nu = jnp.asarray(nu).astype(ftype)
+    cap = jnp.asarray(capacity).astype(ftype)
+    n_pos = jnp.sum(nu > 0.0, axis=1).astype(ftype)
+    # small-T slope: π ≈ νT, so the linear-regime guess is C/Σν
+    total = jnp.sum(nu, axis=1)
+
+    def occ(T):
+        em = jnp.expm1(jnp.minimum(mu * T[:, None], 60.0))
+        pi = em / (em + mu / jnp.maximum(nu, 1e-30))
+        return jnp.sum(jnp.where(nu > 0.0, pi, 0.0), axis=1)
+
+    # double from the linear-regime guess until f(hi) ≥ C (or give up
+    # and report +inf — capacity not reachable)
+    hi0 = cap / jnp.maximum(total, 1e-30)
+
+    def dbl(_, hi):
+        return jnp.where(occ(hi) < cap, hi * 4.0, hi)
+
+    hi = jax.lax.fori_loop(0, 40, dbl, jnp.maximum(hi0, 1e-12))
+    lo = jnp.zeros_like(hi)
+
+    def bis(_, bounds):
+        lo, hi = bounds
+        mid = 0.5 * (lo + hi)
+        below = occ(mid) < cap
+        return jnp.where(below, mid, lo), jnp.where(below, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, n_iters, bis, (lo, hi))
+    T = 0.5 * (lo + hi)
+    T = jnp.where(cap >= n_pos, jnp.inf, T)      # holds everything
+    return jnp.where(cap <= 0.0, 0.0, T)         # zero-capacity cache
+
+
+def solve_characteristic_time(lam_eff: np.ndarray, capacities,
+                              entry_rates: np.ndarray | None = None,
+                              n_iters: int = 64) -> np.ndarray:
+    """Che characteristic times T_C, one per cache.
+
+    ``lam_eff`` — (J, O) or (O,) effective (timer-refresh) request
+    rates; ``capacities`` — scalar or (J,) slot counts;
+    ``entry_rates`` — optional (same shape) insertion rates when an
+    object enters the cache on a different stream than it is refreshed
+    by (similarity caches insert only on global path misses); defaults
+    to ``lam_eff``, which is the classic Che solve
+    Σ (1 − e^{−λT}) = C. Returns (J,) (or scalar for 1-D input) f64
+    times; +inf when the cache can hold every requested object, 0.0
+    for zero-capacity caches.
+    """
+    lam = np.asarray(lam_eff, np.float64)
+    squeeze = lam.ndim == 1
+    if squeeze:
+        lam = lam[None, :]
+    nu = lam if entry_rates is None else \
+        np.asarray(entry_rates, np.float64).reshape(lam.shape)
+    cap = np.broadcast_to(np.asarray(capacities, np.float64),
+                          (lam.shape[0],))
+    T = np.asarray(_solve_tc(jnp.asarray(lam), jnp.asarray(nu),
+                             jnp.asarray(cap), n_iters=n_iters),
+                   np.float64)
+    return float(T[0]) if squeeze else T
+
+
+@jax.jit
+def _cache_pass(pi_row: jax.Array, rate_row: jax.Array, idx: jax.Array,
+                q: jax.Array, dist: jax.Array):
+    """One (ingress, cache) evaluation under *exclusive assignment*.
+
+    A request o′ is served by the NEAREST cached ball member that
+    answers (``routing`` serves cost-min; within one cache that is the
+    distance argmin), so with the ball sorted ascending by C_a and
+    cache-state independence, member m serves o′ with probability
+
+        s_m(o′) = π_m · q_m · reach_m,   reach_m = Π_{l<m} (1 − π_l·q_l)
+
+    (every nearer member is absent or refuses). Returns, per object:
+
+    * ``h[o′]``        = Σ_m s_m — probability o′ is served here;
+    * ``lam_eff[o]``   = Σ_{o′: o ∈ B(o′)} R(o′)·q·reach — the timer
+      *reset* rate of stored key o: the requests it would serve given
+      it is present (no π_o factor — Che's T solves for the sojourn of
+      a key that IS in the cache), scatter-added over the balls;
+    * ``cost_num[o′]`` = Σ_m s_m·C_a — E[C_a·1{served here}], the
+      numerator of the per-request approximation cost;
+    * ``s_self[o′]`` = π_{o′}·q_{o′o′} — the self term of h (0 when
+      the slack mask removed it), used by the caller to condition the
+      hit probability on o′ being absent (entry-rate correction).
+
+    Exclusive assignment is what keeps overlapping balls honest: the
+    plain aggregate λ̃ = Σ q·R credits one request as a reset to EVERY
+    cached member and badly under-predicts SIM-LRU hit rates once
+    balls overlap (each popular key's resets get split across its
+    stored neighbors). ``pi_row`` is (O,); padded gathers (idx = O)
+    read a trailing π = 0 / rate = 0.
+    """
+    pi_pad = jnp.concatenate([pi_row, jnp.zeros((1,), pi_row.dtype)])
+    pq = jnp.minimum(pi_pad[idx] * q, 1.0 - 1e-6)      # (O, M)
+    logs = jnp.log1p(-pq)
+    reach = jnp.exp(jnp.cumsum(logs, axis=1) - logs)   # exclusive cumprod
+    s = pq * reach
+    h = jnp.sum(s, axis=1)
+    cost_num = jnp.sum(s * dist, axis=1)
+    contrib = rate_row[:, None] * q * reach
+    lam_eff = jnp.zeros((pi_row.shape[0] + 1,), rate_row.dtype) \
+        .at[idx].add(contrib)[:-1]
+    n = pi_row.shape[0]
+    s_self = jnp.where(idx[:, 0] == jnp.arange(n), s[:, 0], 0.0)
+    return h, lam_eff, cost_num, s_self
+
+
+# ======================================================================
+# network fixed point
+# ======================================================================
+@dataclasses.dataclass(frozen=True)
+class HitRatePrediction:
+    """One solved analytic plane (all host f64 numpy).
+
+    ``hit_prob[i, o]`` is the probability a request (o, ingress i) is
+    served by *some* on-path cache; ``serve_prob[i, j, o]`` the
+    probability it is served by cache j specifically (0 off-path);
+    ``occupancy[j, o]`` the stationary π; ``T[j]`` the characteristic
+    times. ``mean_cost`` prices eq. (1) on the predicted shares —
+    E[C_a] from the exclusive-assignment serve shares plus reach and
+    repo-miss costs.
+    """
+    T: np.ndarray              # (J,)
+    occupancy: np.ndarray      # (J, O)
+    hit_prob: np.ndarray       # (n_ingress, O)
+    serve_prob: np.ndarray     # (n_ingress, J, O)
+    hit_rate: float            # λ-weighted aggregate
+    ingress_hit_rate: np.ndarray  # (n_ingress,)
+    cache_hit_rate: np.ndarray    # (J,) share of all requests served there
+    mean_cost: float           # predicted per-request cost, eq. (1)
+    n_sweeps: int
+    residual: float            # max |Δπ| of the last sweep
+
+    @property
+    def miss_rate(self) -> float:
+        return 1.0 - self.hit_rate
+
+
+def _paths(net: CacheNetwork) -> list[np.ndarray]:
+    """Per-ingress forwarding paths — the exact rule of
+    ``routing.StrategyPlane`` (finite H ascending, stable ties →
+    lowest cache id)."""
+    H = np.asarray(net.H, np.float64)
+    out = []
+    for i in range(net.n_ingress):
+        fin = np.nonzero(np.isfinite(H[i]))[0]
+        out.append(fin[np.argsort(H[i, fin], kind="stable")])
+    return out
+
+
+def predict_hitrates(net: CacheNetwork, lam: np.ndarray,
+                     balls: SimilarityBalls, n_sweeps: int = 16,
+                     damping: float = 0.6) -> HitRatePrediction:
+    """Solve the similarity-Che fixed point over one cache network.
+
+    ``lam`` — (n_ingress, O) request rates (any positive scale; costs
+    and hit rates are per-request). ``balls`` — the catalog's
+    similarity structure at the serving threshold (q already encodes
+    SIM-LRU vs RND-LRU). Each sweep walks every ingress path once:
+    per (ingress, cache) it evaluates the exclusive-assignment serve
+    shares and reset rates from the current occupancies
+    (:func:`_cache_pass`), thins the arrival stream, then re-solves
+    T_C per cache and damps the occupancy update (``damping`` = 1 is
+    undamped).
+    """
+    lam = np.asarray(lam, np.float64)
+    n_ing, n_obj = lam.shape
+    if balls.n_objects != n_obj:
+        raise ValueError(f"balls were enumerated over {balls.n_objects} "
+                         f"objects but lam has {n_obj}")
+    J = net.n_caches
+    H = np.asarray(net.H, np.float64)
+    h_repo = np.asarray(net.h_repo, np.float64)
+    caps = np.asarray(net.capacities, np.float64)
+    paths = _paths(net)
+    idx = jnp.asarray(balls.idx.astype(np.int32))
+    dist = jnp.asarray(balls.dist)
+    # per-(ingress, cache) ball pruning at the repo-cost slack: a hit at
+    # (i, j) needs C_a < h_repo[i] − H[i, j] (routing.serve_one's
+    # eligibility), so members past the slack can't serve or refresh
+    q_ij: dict[tuple[int, int], jax.Array] = {}
+    q_base = jnp.asarray(balls.q)
+    for i in range(n_ing):
+        for j in paths[i]:
+            slack = h_repo[i] - H[i, j]
+            q_ij[(i, int(j))] = q_base * (dist < slack)
+
+    def sweep_passes(pi):
+        """One path walk: per-cache refresh (μ) and entry (ν) rates
+        plus per-(ingress, cache) serve shares and cost numerators."""
+        lam_eff = np.zeros((J, n_obj))
+        hs: dict[tuple[int, int], np.ndarray] = {}
+        cn: dict[tuple[int, int], np.ndarray] = {}
+        s0: dict[tuple[int, int], np.ndarray] = {}
+        for i in range(n_ing):
+            stream = lam[i].copy()
+            for j in paths[i]:
+                h, le, cnum, ss = _cache_pass(jnp.asarray(pi[j]),
+                                              jnp.asarray(stream), idx,
+                                              q_ij[(i, int(j))], dist)
+                lam_eff[j] += np.asarray(le, np.float64)
+                hs[(i, int(j))] = np.asarray(h, np.float64)
+                cn[(i, int(j))] = np.asarray(cnum, np.float64)
+                s0[(i, int(j))] = np.asarray(ss, np.float64)
+                stream = stream * (1.0 - hs[(i, int(j))])
+        # entry rates: SIM/RND-LRU insert o at every traversed cache
+        # only on a GLOBAL path miss, so ν_j(o) is the end-of-path miss
+        # stream — with the factor at j itself conditioned on o being
+        # absent there (h | o absent = (h − π_o·q_oo)/(1 − π_o·q_oo))
+        nu = np.zeros((J, n_obj))
+        for i in range(n_ing):
+            gm = lam[i].copy()
+            for j in paths[i]:
+                gm = gm * (1.0 - hs[(i, int(j))])
+            for j in paths[i]:
+                h, ss = hs[(i, int(j))], s0[(i, int(j))]
+                h_abs = (h - ss) / np.maximum(1.0 - ss, 1e-12)
+                corr = (1.0 - h_abs) / np.maximum(1.0 - h, 1e-12)
+                nu[j] += gm * np.minimum(corr, 1e12)
+        return lam_eff, nu, hs, cn
+
+    pi = np.zeros((J, n_obj))
+    residual = np.inf
+    for _ in range(n_sweeps):
+        lam_eff, nu, hs, cn = sweep_passes(pi)
+        T = solve_characteristic_time(lam_eff, caps, entry_rates=nu)
+        pi_new = np.zeros_like(pi)
+        for j in range(J):
+            if caps[j] <= 0:
+                continue
+            pi_new[j] = _occupancy_np(lam_eff[j], nu[j], T[j])
+        residual = float(np.max(np.abs(pi_new - pi))) if J else 0.0
+        pi = damping * pi_new + (1.0 - damping) * pi
+        if residual < 1e-9:
+            break
+
+    # final serve/hit shares + predicted cost on the converged state
+    lam_eff, nu, hs, cn = sweep_passes(pi)
+    T = solve_characteristic_time(lam_eff, caps, entry_rates=nu)
+    serve = np.zeros((n_ing, J, n_obj))
+    hit = np.zeros((n_ing, n_obj))
+    cost = 0.0
+    total = lam.sum()
+    for i in range(n_ing):
+        stream = lam[i].copy()
+        for j in paths[i]:
+            h = hs[(i, int(j))]
+            serve[i, j] = stream * h
+            # E[C_a·1{served at j}] + the reach cost of served mass
+            cost += float(np.sum(stream * cn[(i, int(j))])
+                          + np.sum(serve[i, j]) * H[i, j])
+            stream = stream * (1.0 - h)
+        hit[i] = 1.0 - np.divide(stream, lam[i], out=np.zeros(n_obj),
+                                 where=lam[i] > 0)
+        cost += float(np.sum(stream) * h_repo[i])
+
+    served_mass = serve.sum(axis=(0, 2))
+    ing_mass = lam.sum(axis=1)
+    return HitRatePrediction(
+        T=np.asarray(T), occupancy=pi, hit_prob=hit, serve_prob=serve,
+        hit_rate=float(served_mass.sum() / max(total, 1e-300)),
+        ingress_hit_rate=np.divide(
+            (lam * hit).sum(axis=1), ing_mass,
+            out=np.zeros(n_ing), where=ing_mass > 0),
+        cache_hit_rate=served_mass / max(total, 1e-300),
+        mean_cost=cost / max(total, 1e-300),
+        n_sweeps=n_sweeps, residual=residual)
+
+
+# ======================================================================
+# engine surrogate
+# ======================================================================
+def surrogate_cost(net: CacheNetwork, lam: np.ndarray,
+                   balls: SimilarityBalls | None = None,
+                   n_sweeps: int = 8) -> float:
+    """Analytic per-request cost of ``net`` under demand ``lam`` — the
+    cheap surrogate the streaming engine consults before paying for a
+    device placement solve (serve/engine.request_refresh).
+
+    Defaults to exact-hit balls (θ=0): the classic Che plane needs
+    only the demand *shape*, runs in O(O·path) per call, and moves
+    monotonically with demand drift — which is all the refresh gate
+    needs. The engine's static placements are not LRU caches; this is
+    a drift thermometer in cost units, not a placement evaluator.
+    """
+    lam = np.asarray(lam, np.float64)
+    if balls is None:
+        balls = exact_hit_balls(lam.shape[1])
+    return predict_hitrates(net, lam, balls, n_sweeps=n_sweeps).mean_cost

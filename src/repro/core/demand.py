@@ -15,6 +15,7 @@ Demand generators cover the paper's experiments:
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -34,18 +35,38 @@ class Demand:
     def n_objects(self) -> int:
         return self.lam.shape[1]
 
-    def sample(self, n: int, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
-        """Sample n requests → (object_idx, ingress_idx), iid ∝ λ.
+    @functools.cached_property
+    def _cdf(self) -> np.ndarray:
+        """Normalized cumulative weights over the flattened (ingress,
+        object) grid, computed once per Demand (``lam`` is frozen).
 
-        ``lam`` is cast to float64 and renormalized first: a float32
-        catalog's probabilities can sum to 1 ± few·1e-7, which
-        ``rng.choice`` rejects ("probabilities do not sum to 1"), and
-        the renormalization keeps draws reproducible under a fixed
-        ``rng`` regardless of the platform's float/int widths.
+        Cast to float64 and renormalized: a float32 catalog's
+        probabilities can sum to 1 ± few·1e-7, and the renormalization
+        keeps draws reproducible under a fixed ``rng`` regardless of
+        the platform's float/int widths. (``cached_property`` writes
+        straight into the instance ``__dict__``, which is fine on a
+        frozen dataclass — only ``__setattr__`` is blocked.)
         """
         p = np.asarray(self.lam, np.float64).ravel()
-        p = p / p.sum()
-        flat = rng.choice(p.size, size=n, p=p)
+        cdf = np.cumsum(p)
+        cdf /= cdf[-1]
+        return cdf
+
+    def sample(self, n: int,
+               rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+        """Sample n requests → (object_idx, ingress_idx), iid ∝ λ.
+
+        Draws are inverse-CDF over the cached cumulative weights —
+        O(n·log(O)) per call instead of the O(n_ingress·O) per call of
+        rebuilding the probability vector for ``rng.choice`` (which
+        ``serve/stream.py`` was paying once per streamed request).
+        This is bit-compatible with the previous implementation:
+        ``Generator.choice(size, p)`` itself draws
+        ``cdf.searchsorted(random(n), side='right')``, so the same
+        ``rng`` state yields the same requests, and n calls of
+        ``sample(1)`` equal one ``sample(n)``.
+        """
+        flat = self._cdf.searchsorted(rng.random(n), side="right")
         ing, obj = np.divmod(flat, self.lam.shape[1])
         return obj.astype(np.int64), ing.astype(np.int64)
 

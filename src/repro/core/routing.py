@@ -66,6 +66,36 @@ from repro.core.topology import CacheNetwork
 STRATEGIES = ("lce", "lcd", "probcache", "sim-lru", "rnd-lru")
 
 
+def rnd_lru_serve_prob(ca: float, theta_eff: float) -> float:
+    """RND-LRU serving probability, clamped to a probability:
+
+        q = clamp(1 − C_a/θ_eff, 0, 1)
+
+    with the two boundary semantics made explicit instead of left to
+    the raw formula:
+
+    * ``ca <= 0`` (an exact-match key) always serves — q → 1 as
+      C_a → 0 for any positive θ_eff, and an exact hit under θ_eff = 0
+      (an exact-hit-only threshold) is still a hit;
+    * ``theta_eff <= 0`` (non-positive slack) never serves — the raw
+      1 − C_a/θ_eff is negative for every C_a > 0 there (the old
+      ``max(theta, 1e-300)`` guard only kept the *division* finite, so
+      q could still come out hugely negative and only accidentally
+      behaved like "never" when compared against a uniform draw).
+
+    ``serve_one``'s own eligibility arithmetic (C_a + H < h_repo in
+    f64) cannot currently produce an eligible cache whose unclamped q
+    is negative, so this is defensive hardening pinned at the unit
+    level (tests/test_scenarios.py) rather than a behavior change on
+    reachable traces.
+    """
+    if ca <= 0.0:
+        return 1.0
+    if theta_eff <= 0.0:
+        return 0.0
+    return float(min(max(1.0 - ca / theta_eff, 0.0), 1.0))
+
+
 @dataclasses.dataclass
 class RouteDecision:
     """Per-request serving decisions of one batch (host f64 arrays)."""
@@ -189,11 +219,16 @@ class StrategyPlane:
         serve_p = -1
         if self.strategy == "rnd-lru":
             # walk up the path; each eligible cache answers with prob
-            # q = 1 − C_a/θ_eff, a refusal falls through
+            # q = clamp(1 − C_a/θ_eff, 0, 1), a refusal falls through
             for p in np.nonzero(eligible)[0]:
                 theta = (self.threshold if self.threshold is not None
                          else repo - self.H[ing, path[p]])
-                q = 1.0 - cas[p] / max(theta, 1e-300)
+                q = rnd_lru_serve_prob(float(cas[p]), float(theta))
+                if q <= 0.0 and theta <= 0.0:
+                    # non-positive slack: can never serve — skip
+                    # without spending a coin (q = 0 at ca == θ still
+                    # draws, matching the pre-clamp rng stream)
+                    continue
                 if self.rng.random() < q:
                     serve_p = int(p)
                     break

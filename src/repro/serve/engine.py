@@ -115,6 +115,7 @@ quantified with the paper's own objective).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
@@ -125,6 +126,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import demand as demand_api
+from repro.core.analysis import surrogate_cost
 from repro.core.catalog import Catalog
 from repro.core.objective import DeviceInstance, Instance
 from repro.core.placement import (DuelPlane, device_greedy,
@@ -193,6 +195,14 @@ class EngineConfig:
     bucket: bool = True           # power-of-two batch bucketing
     min_bucket: int = 8           # smallest bucket (tiny batches coalesce)
     refresh_on_promotion: bool = False  # duel churn → background re-solve
+    refresh_min_gain: float = 0.0 # analytic refresh gate: request_refresh
+    #                               prices the snapshotted demand with the
+    #                               Che surrogate (core/analysis/hitrate)
+    #                               and skips the device solve when the
+    #                               predicted cost moved less than this
+    #                               since the last installed solve (cost
+    #                               units, i.e. calibrated ms; 0 = gate
+    #                               off, every request solves)
     warm_start: bool = False      # §4 continuous-limit warm start: solve
     #                               the topology's continuous program,
     #                               band-map (Prop 4.2), polish — replaces
@@ -211,6 +221,13 @@ class EngineConfig:
     strategy_seed: int = 0        # probcache / rnd-lru coin seed
 
 
+# retained batch-latency window: percentiles are computed over the most
+# recent LATENCY_WINDOW batches. An unbounded list was a slow leak on
+# long driver runs (every batch appended forever); a deque(maxlen=…)
+# ring keeps memory O(1) and the percentiles exact on the window.
+LATENCY_WINDOW = 65536
+
+
 @dataclasses.dataclass
 class ServeStats:
     n_requests: int = 0
@@ -218,9 +235,16 @@ class ServeStats:
     total_cost: float = 0.0
     total_approx_cost: float = 0.0
     model_calls: int = 0
+    # refresh-gate outcomes (EngineConfig.refresh_min_gain): requests
+    # skipped because the analytic surrogate saw too small a predicted
+    # cost delta vs started because it saw enough (or the gate is off)
+    refresh_skipped: int = 0
+    refresh_triggered: int = 0
     # wall-clock per served batch (appended by SimCacheEngine.serve);
-    # the latency percentiles the streaming driver/bench report
-    batch_latencies_ms: list = dataclasses.field(default_factory=list)
+    # the latency percentiles the streaming driver/bench report —
+    # bounded ring, newest LATENCY_WINDOW batches
+    batch_latencies_ms: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
 
     @property
     def hit_rate(self) -> float:
@@ -324,6 +348,11 @@ class SimCacheEngine:
         #                                   over, instead of the all-time
         #                                   value above
         self.last_predicted_cost: float | None = None
+        # analytic-surrogate cost at the demand snapshot of the last
+        # installed solve — the refresh gate's comparison point (None
+        # until a gated solve has run, so the first request always goes
+        # through)
+        self._surrogate_baseline: float | None = None
         # key-axis shard policy for the sharded data plane: resolved once
         # from the mesh, reused on every placement refresh
         self.mesh = mesh
@@ -531,6 +560,9 @@ class SimCacheEngine:
         slots, pred = self._solve(inst, algo, device)
         self._install(slots, inst)
         self.last_predicted_cost = pred
+        if self.ecfg.refresh_min_gain > 0.0:
+            self._surrogate_baseline = surrogate_cost(
+                inst.net, np.asarray(inst.dem.lam, np.float64))
         return pred
 
     # ------------------------------------------- double-buffered refresh
@@ -540,13 +572,33 @@ class SimCacheEngine:
         the observed demand; the active buffer keeps serving throughout.
         Returns False (and does nothing) if a refresh is already in
         flight. The finished solve is *not* installed here — call
-        :meth:`poll_refresh` from the serving loop to swap it in."""
+        :meth:`poll_refresh` from the serving loop to swap it in.
+
+        With ``EngineConfig.refresh_min_gain > 0`` the snapshot is first
+        priced by the analytic Che surrogate
+        (``core.analysis.surrogate_cost``, milliseconds even at 10⁶
+        objects): if the predicted per-request cost moved less than the
+        gate since the demand snapshot of the last installed solve, the
+        device solve is skipped (returns False,
+        ``ServeStats.refresh_skipped`` += 1) — stationary demand stops
+        paying for rebuilds it doesn't need, while drift still triggers
+        (``refresh_triggered``)."""
         if self._in_flight:
             return False
         algo = algo or self.ecfg.algo
         if device is None:
             device = self.ecfg.device_placement
         inst = self.observed_instance()       # snapshot: lam is a copy
+        surrogate_now: float | None = None
+        if self.ecfg.refresh_min_gain > 0.0:
+            surrogate_now = surrogate_cost(
+                inst.net, np.asarray(inst.dem.lam, np.float64))
+            base = self._surrogate_baseline
+            if base is not None and \
+                    abs(surrogate_now - base) < self.ecfg.refresh_min_gain:
+                self.stats.refresh_skipped += 1
+                return False
+            self.stats.refresh_triggered += 1
         self._in_flight = True
 
         def work():
@@ -555,7 +607,7 @@ class SimCacheEngine:
                 # serving thread's collectives (see _solve's docstring)
                 slots, pred = self._solve(inst, algo, device, shard=False)
                 with self._refresh_lock:
-                    self._pending = (slots, inst, pred)
+                    self._pending = (slots, inst, pred, surrogate_now)
             except BaseException:
                 self._in_flight = False       # never wedge the flag
                 raise
@@ -584,7 +636,7 @@ class SimCacheEngine:
             pend, self._pending = self._pending, None
         if pend is None:
             return False
-        slots, inst, pred = pend
+        slots, inst, pred, surrogate_now = pend
         t0 = time.perf_counter()
         self._install(slots, inst)
         stall = time.perf_counter() - t0
@@ -593,6 +645,9 @@ class SimCacheEngine:
         self.last_swap_stall_s = stall
         self.swap_count += 1
         self.last_predicted_cost = pred
+        if surrogate_now is not None:
+            # the installed solve's snapshot becomes the gate baseline
+            self._surrogate_baseline = surrogate_now
         self._in_flight = False
         return True
 

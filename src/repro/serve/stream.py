@@ -33,6 +33,7 @@ swap stall totals, and the placement-version trajectory.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 import time
@@ -41,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.demand import Demand
-from repro.serve.engine import SimCacheEngine
+from repro.serve.engine import LATENCY_WINDOW, SimCacheEngine
 
 
 @dataclasses.dataclass
@@ -85,9 +86,14 @@ class DriverStats:
     n_batches: int = 0
     wall_s: float = 0.0
     batch_sizes: list = dataclasses.field(default_factory=list)
-    batch_latencies_ms: list = dataclasses.field(default_factory=list)
+    # bounded ring (same window as ServeStats): percentiles over the
+    # newest LATENCY_WINDOW batches, O(1) memory on long runs
+    batch_latencies_ms: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
     versions: list = dataclasses.field(default_factory=list)
     refreshes_started: int = 0
+    refresh_skipped: int = 0        # surrogate gate said "not worth it"
+    refresh_triggered: int = 0      # gate evaluated and let it through
     swaps: int = 0
     swap_stall_s: float = 0.0
     max_swap_stall_s: float = 0.0   # max over THIS run's swaps only
@@ -197,6 +203,8 @@ class StreamDriver:
         swaps0 = eng.swap_count
         stall0 = eng.swap_stall_s
         events0 = eng.placement_events
+        skipped0 = eng.stats.refresh_skipped
+        triggered0 = eng.stats.refresh_triggered
         t_run0 = time.perf_counter()
         while st.n_requests < n_requests:
             ids, ings = self._next_batch(n_requests - st.n_requests)
@@ -227,6 +235,8 @@ class StreamDriver:
         st.swaps = eng.swap_count - swaps0
         st.swap_stall_s = eng.swap_stall_s - stall0
         st.placement_events = eng.placement_events - events0
+        st.refresh_skipped = eng.stats.refresh_skipped - skipped0
+        st.refresh_triggered = eng.stats.refresh_triggered - triggered0
         return st
 
     def drain_refresh(self) -> bool:

@@ -77,3 +77,66 @@ def test_generators_still_normalize(cat):
                 demand_api.gaussian_grid(cat, sigma=2.0)):
         assert dem.lam.sum() == pytest.approx(1.0)
         assert np.isfinite(dem.lam).all()
+
+
+# ===================================================================
+# sample(): cached-CDF fast path
+# ===================================================================
+def test_sample_bit_compatible_with_generator_choice(cat):
+    """The cached-CDF inverse sampling is bit-compatible with the old
+    ``rng.choice(size, p=flat_lam)`` implementation: same rng state →
+    same requests (golden traces depend on this)."""
+    dem = demand_api.zipf(cat, alpha=1.1, n_ingress=3, seed=2)
+    obj, ing = dem.sample(500, np.random.default_rng(42))
+    rng_ref = np.random.default_rng(42)
+    p = np.asarray(dem.lam, np.float64).ravel()
+    flat_ref = rng_ref.choice(p.size, size=500, p=p / p.sum())
+    ing_ref, obj_ref = np.divmod(flat_ref, dem.lam.shape[1])
+    np.testing.assert_array_equal(obj, obj_ref)
+    np.testing.assert_array_equal(ing, ing_ref)
+
+
+def test_sample_single_draws_equal_batched(cat):
+    """n calls of sample(1) consume the rng exactly like one sample(n)
+    — the streaming driver draws one request at a time, the benches
+    draw batches; both must walk the same trace."""
+    dem = demand_api.zipf(cat, alpha=0.9, n_ingress=2, seed=1)
+    obj_b, ing_b = dem.sample(200, np.random.default_rng(7))
+    rng = np.random.default_rng(7)
+    singles = [dem.sample(1, rng) for _ in range(200)]
+    np.testing.assert_array_equal(obj_b,
+                                  np.concatenate([o for o, _ in singles]))
+    np.testing.assert_array_equal(ing_b,
+                                  np.concatenate([i for _, i in singles]))
+
+
+def test_sample_statistics_match_lam(cat):
+    dem = demand_api.zipf(cat, alpha=1.0, n_ingress=2, seed=3)
+    obj, ing = dem.sample(200_000, np.random.default_rng(0))
+    emp = np.zeros_like(dem.lam)
+    np.add.at(emp, (ing, obj), 1.0)
+    emp /= emp.sum()
+    assert np.abs(emp - dem.lam).max() < 5e-3
+
+
+def test_sample_per_call_cost_does_not_scale_with_catalog():
+    """Perf guard for the O(n_ingress·O)-per-call regression: after the
+    first call builds the CDF, a sample(1) on a 100× larger catalog
+    must not cost ~100× more (the old code renormalized the full lam
+    matrix inside every call)."""
+    import time
+
+    def per_call_s(n_objects, calls=300):
+        lam = np.random.default_rng(0).random((4, n_objects))
+        dem = demand_api.Demand(lam=lam / lam.sum())
+        rng = np.random.default_rng(1)
+        dem.sample(1, rng)                      # build the cached CDF
+        t0 = time.perf_counter()
+        for _ in range(calls):
+            dem.sample(1, rng)
+        return (time.perf_counter() - t0) / calls
+
+    small, big = per_call_s(2_000), per_call_s(200_000)
+    # searchsorted is O(log O): allow generous jitter, reject O(O)
+    assert big < small * 20 + 1e-4, \
+        f"sample(1) scaled with catalog size: {small:.2e}s → {big:.2e}s"

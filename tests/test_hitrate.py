@@ -1,0 +1,308 @@
+"""Analytic hit-rate plane (core/analysis/hitrate.py): the Che
+characteristic-time solver, similarity-ball enumeration (exact + LSH),
+and the network fixed point — validated against scalar references and
+against ``StrategyPlane`` trace replays on the instances the model
+claims (single caches and multi-ingress graph scenarios; the full
+family × demand grid rides benchmarks/hitrate_bench.py)."""
+import numpy as np
+import pytest
+
+from repro.core import catalog as catalog_api
+from repro.core import demand as demand_api
+from repro.core import scenarios, topology
+from repro.core.analysis import (HitRatePrediction, exact_hit_balls,
+                                 predict_hitrates, similarity_balls,
+                                 solve_characteristic_time, surrogate_cost)
+from repro.core.routing import StrategyPlane
+
+
+def _zipf_rates(n, alpha=0.8, seed=0):
+    rng = np.random.default_rng(seed)
+    lam = 1.0 / (rng.permutation(n) + 1.0) ** alpha
+    return lam / lam.sum()
+
+
+def _replay_hit_rate(net, coords, dem, strategy, threshold, n_requests,
+                     seed=7, warm_frac=0.5):
+    """Measured hit rate of a StrategyPlane trace replay, counted over
+    the post-warmup tail only (the analytic plane predicts steady
+    state, not the cold fill)."""
+    pl = StrategyPlane(net, coords, strategy=strategy,
+                       threshold=threshold, seed=seed)
+    rng = np.random.default_rng(seed)
+    warm = int(n_requests * warm_frac)
+    hits = total = 0
+    for start in range(0, n_requests, 2048):
+        k = min(2048, n_requests - start)
+        objs, ings = dem.sample(k, rng)
+        dec = pl.serve(objs, ings)
+        lo = max(warm - start, 0)
+        if lo < k:
+            hits += int(dec.hit[lo:].sum())
+            total += k - lo
+    return hits / total
+
+
+# ===================================================================
+# characteristic-time solver
+# ===================================================================
+def test_solver_matches_scalar_bisection():
+    """The jitted vectorized solve agrees with a plain f64 scalar
+    bisection of Σ (1 − e^{−λT}) = C."""
+    lam = _zipf_rates(300)
+    cap = 25.0
+    T = solve_characteristic_time(lam, cap)
+
+    def occ_sum(t):
+        return np.sum(-np.expm1(-lam * t))
+
+    lo, hi = 0.0, 1.0
+    while occ_sum(hi) < cap:
+        hi *= 2.0
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        lo, hi = (mid, hi) if occ_sum(mid) < cap else (lo, mid)
+    assert T == pytest.approx(0.5 * (lo + hi), rel=1e-3)
+    # the constraint itself is met tightly
+    assert occ_sum(T) == pytest.approx(cap, rel=1e-3)
+
+
+def test_solver_edge_capacities():
+    lam = _zipf_rates(50)
+    # capacity ≥ #requested objects: the cache holds everything → T = ∞
+    assert np.isinf(solve_characteristic_time(lam, 50))
+    assert np.isinf(solve_characteristic_time(lam, 80))
+    # zero capacity → T = 0
+    assert solve_characteristic_time(lam, 0) == 0.0
+    # batched (J, O) form with per-cache capacities
+    T = solve_characteristic_time(np.stack([lam, lam, lam]),
+                                  np.array([10.0, 0.0, 50.0]))
+    assert T.shape == (3,)
+    assert 0.0 < T[0] < np.inf and T[1] == 0.0 and np.isinf(T[2])
+
+
+def test_two_rate_defaults_to_classic_che():
+    """entry_rates=None must be exactly the classic solve (μ = ν = λ):
+    the two-rate occupancy reduces to 1 − e^{−λT} there."""
+    lam = _zipf_rates(200, seed=3)
+    assert solve_characteristic_time(lam, 20) == \
+        solve_characteristic_time(lam, 20, entry_rates=lam)
+
+
+def test_solver_scale_invariance():
+    """Demand is per-request: scaling λ by c scales T by 1/c and leaves
+    every occupancy (hence every hit rate) unchanged."""
+    lam = _zipf_rates(150, seed=5)
+    T1 = solve_characteristic_time(lam, 12)
+    T2 = solve_characteristic_time(100.0 * lam, 12)
+    assert T2 == pytest.approx(T1 / 100.0, rel=1e-3)
+    np.testing.assert_allclose(-np.expm1(-lam * T1),
+                               -np.expm1(-100.0 * lam * T2), atol=1e-4)
+
+
+# ===================================================================
+# similarity balls
+# ===================================================================
+def test_exact_hit_balls_are_identity():
+    b = exact_hit_balls(7)
+    assert b.max_size == 1 and b.theta == 0.0
+    np.testing.assert_array_equal(b.idx[:, 0], np.arange(7))
+    assert np.all(b.q == 1.0) and np.all(b.dist == 0.0)
+    # θ ≤ 0 in the enumerator degenerates to the same structure
+    coords = np.random.default_rng(0).normal(size=(7, 3)).astype(np.float32)
+    for theta in (0.0, -1.0, None):
+        d = similarity_balls(coords, theta)
+        np.testing.assert_array_equal(d.idx, b.idx)
+
+
+def test_similarity_balls_exact_against_bruteforce():
+    """Exact enumeration == the O(O²) f64 brute force: membership,
+    ascending distance order, self first, q weights for both modes."""
+    cat = catalog_api.embedding_catalog(n=250, dim=4, seed=2)
+    coords = np.asarray(cat.coords, np.float64)
+    d_full = np.sqrt(((coords[:, None, :] - coords[None, :, :]) ** 2)
+                     .sum(-1))
+    theta = float(np.quantile(d_full[d_full > 0], 0.02))
+    balls = similarity_balls(cat.coords, theta, mode="exact")
+    assert balls.mean_size > 1.0          # θ wide enough to be non-trivial
+    for o in range(250):
+        members = balls.idx[o][balls.idx[o] < 250]
+        assert members[0] == o and balls.dist[o, 0] == 0.0
+        np.testing.assert_array_equal(
+            np.sort(members), np.nonzero(d_full[o] <= theta)[0])
+        dd = balls.dist[o][:len(members)]
+        assert np.all(np.diff(dd) >= 0)   # sorted ascending by C_a
+        np.testing.assert_allclose(dd, np.sort(d_full[o][members]),
+                                    rtol=1e-5, atol=1e-5)
+    # hard weights: exactly the membership indicator
+    assert np.all(balls.q[balls.idx < 250] == 1.0)
+    assert np.all(balls.q[balls.idx >= 250] == 0.0)
+    # rnd weights: clip(1 − d/θ, 0, 1) on the same members
+    rnd = similarity_balls(cat.coords, theta, mode="exact", q_mode="rnd")
+    mem = rnd.idx < 250
+    np.testing.assert_allclose(
+        rnd.q[mem], np.clip(1.0 - rnd.dist[mem] / theta, 0.0, 1.0),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_similarity_balls_lsh_subset_of_exact():
+    """The LSH path returns a subset of the exact balls (recall < 1 is
+    allowed, false members are not), always keeps self, and every kept
+    member passes the exact θ filter."""
+    cat = catalog_api.embedding_catalog(n=600, dim=6, seed=4)
+    exact = similarity_balls(cat.coords, theta=60.0, mode="exact")
+    lsh = similarity_balls(cat.coords, theta=60.0, mode="lsh", seed=1)
+    kept = dropped = 0
+    for o in range(600):
+        em = set(exact.idx[o][exact.idx[o] < 600].tolist())
+        lm = set(lsh.idx[o][lsh.idx[o] < 600].tolist())
+        assert o in lm
+        assert lm <= em, f"LSH ball {o} contains non-members"
+        kept += len(lm)
+        dropped += len(em - lm)
+    assert np.all(lsh.dist[lsh.idx < 600] <= 60.0 + 1e-4)
+    # multi-probe SimHash keeps the bulk of the near neighbors
+    assert kept / max(kept + dropped, 1) > 0.5
+
+
+def test_similarity_balls_max_ball_truncates_farthest():
+    cat = catalog_api.embedding_catalog(n=200, dim=4, seed=6)
+    full = similarity_balls(cat.coords, theta=120.0, mode="exact")
+    assert full.max_size > 3
+    cut = similarity_balls(cat.coords, theta=120.0, mode="exact",
+                           max_ball=3)
+    assert cut.max_size == 3 and cut.truncated > 0
+    # the kept members are each ball's nearest 3 (self included)
+    np.testing.assert_array_equal(cut.idx, full.idx[:, :3])
+
+
+# ===================================================================
+# single cache: prediction vs trace replay
+# ===================================================================
+def test_classic_che_matches_lru_replay():
+    """Exact-hit (θ=0) prediction vs a simulated classic LRU (sim-lru
+    with threshold 0 inserts on miss + refreshes on exact hit): the
+    textbook Che regime, within 3pp."""
+    cat = catalog_api.embedding_catalog(n=300, dim=8, seed=1)
+    net = topology.single_cache(30, 150.0)
+    dem = demand_api.zipf(cat, alpha=0.9, seed=2)
+    pred = predict_hitrates(net, dem.lam, exact_hit_balls(300))
+    measured = _replay_hit_rate(net, cat.coords, dem, "sim-lru", 0.0,
+                                n_requests=40_000)
+    assert abs(pred.hit_rate - measured) < 0.03
+    # occupancies respect the capacity constraint
+    assert pred.occupancy.sum() == pytest.approx(30.0, rel=1e-2)
+
+
+@pytest.mark.parametrize("strategy,q_mode", [("sim-lru", "hard"),
+                                             ("rnd-lru", "rnd")])
+def test_similarity_prediction_matches_replay(strategy, q_mode):
+    """The similarity generalization on one cache: SIM-LRU (hard balls)
+    and RND-LRU (clipped-linear q) within 5pp of a trace replay."""
+    cat = catalog_api.embedding_catalog(n=400, dim=8, seed=0)
+    coords = np.asarray(cat.coords, np.float64)
+    d = np.sqrt(((coords[:1000, None, :] - coords[None, :, :]) ** 2)
+                .sum(-1))
+    theta = float(np.quantile(d[d > 0], 0.02))
+    net = topology.single_cache(30, 1e9)   # slack never binds: θ does
+    dem = demand_api.zipf(cat, alpha=0.9, seed=2)
+    balls = similarity_balls(cat.coords, theta, q_mode=q_mode,
+                             mode="exact")
+    assert balls.mean_size > 2.0           # non-trivial similarity regime
+    pred = predict_hitrates(net, dem.lam, balls)
+    measured = _replay_hit_rate(net, cat.coords, dem, strategy, theta,
+                                n_requests=40_000)
+    assert abs(pred.hit_rate - measured) < 0.05, \
+        f"{strategy}: predicted {pred.hit_rate:.3f} vs " \
+        f"measured {measured:.3f} (ball {balls.mean_size:.1f})"
+
+
+def test_multi_ingress_graph_prediction_matches_replay():
+    """Network composition on a PR 8 general-graph scenario (the
+    validity regime: multi-ingress decorrelates the shared caches):
+    exact-hit prediction vs replay within 5pp."""
+    sc = scenarios.scenario("scale_free", cache_budget=32,
+                            placement="degree", n_ingress=4, seed=3)
+    cat = catalog_api.embedding_catalog(n=400, dim=8, seed=1)
+    dem = demand_api.zipf(cat, alpha=1.0, n_ingress=4, seed=5)
+    pred = predict_hitrates(sc.net, dem.lam, exact_hit_balls(400))
+    measured = _replay_hit_rate(sc.net, cat.coords, dem, "sim-lru", 0.0,
+                                n_requests=40_000)
+    assert abs(pred.hit_rate - measured) < 0.05, \
+        f"predicted {pred.hit_rate:.3f} vs measured {measured:.3f}"
+
+
+# ===================================================================
+# prediction structure + monotonicity
+# ===================================================================
+def _single_cache_pred(cap=20, theta=None, q_mode="hard", n=300):
+    cat = catalog_api.embedding_catalog(n=n, dim=6, seed=3)
+    net = topology.single_cache(cap, 1e9)
+    dem = demand_api.zipf(cat, alpha=0.9, seed=4)
+    balls = exact_hit_balls(n) if theta is None else \
+        similarity_balls(cat.coords, theta, q_mode=q_mode, mode="exact")
+    return predict_hitrates(net, dem.lam, balls)
+
+
+def test_prediction_conservation_and_shapes():
+    sc = scenarios.scenario("isp", cache_budget=24, placement="degree",
+                            n_ingress=3, seed=1)
+    cat = catalog_api.embedding_catalog(n=200, dim=6, seed=2)
+    dem = demand_api.zipf(cat, alpha=0.8, n_ingress=3, seed=1)
+    pred = predict_hitrates(sc.net, dem.lam, exact_hit_balls(200))
+    assert isinstance(pred, HitRatePrediction)
+    J = sc.net.n_caches
+    assert pred.T.shape == (J,) and pred.occupancy.shape == (J, 200)
+    assert pred.hit_prob.shape == (3, 200)
+    assert pred.serve_prob.shape == (3, J, 200)
+    # probabilities and the λ-weighted aggregates are consistent
+    assert np.all((pred.occupancy >= 0) & (pred.occupancy <= 1))
+    assert np.all((pred.hit_prob >= -1e-12) & (pred.hit_prob <= 1 + 1e-12))
+    assert pred.hit_rate == pytest.approx(
+        float((dem.lam * pred.hit_prob).sum() / dem.lam.sum()), abs=1e-9)
+    assert pred.cache_hit_rate.sum() == pytest.approx(pred.hit_rate,
+                                                      abs=1e-9)
+    assert pred.hit_rate + pred.miss_rate == pytest.approx(1.0)
+    # per-cache expected occupancy never exceeds capacity
+    assert np.all(pred.occupancy.sum(axis=1)
+                  <= sc.net.capacities + 1e-2 * sc.net.capacities.max())
+    assert 0.0 < pred.mean_cost <= float(sc.net.h_repo.max()) + 1e-9
+
+
+def test_hit_rate_monotone_in_capacity_and_theta():
+    by_cap = [_single_cache_pred(cap=c).hit_rate for c in (5, 20, 80)]
+    assert by_cap[0] < by_cap[1] < by_cap[2]
+    cat = catalog_api.embedding_catalog(n=300, dim=6, seed=3)
+    coords = np.asarray(cat.coords, np.float64)
+    d = np.sqrt(((coords[:, None, :] - coords[None, :, :]) ** 2).sum(-1))
+    t1, t2 = (float(np.quantile(d[d > 0], q)) for q in (0.01, 0.05))
+    by_theta = [_single_cache_pred(theta=t).hit_rate
+                for t in (None, t1, t2)]
+    assert by_theta[0] <= by_theta[1] + 1e-9
+    assert by_theta[1] <= by_theta[2] + 1e-9
+    assert by_theta[2] > by_theta[0]      # similarity strictly helps
+
+
+def test_balls_object_count_mismatch_raises():
+    net = topology.single_cache(5, 10.0)
+    with pytest.raises(ValueError, match="enumerated over"):
+        predict_hitrates(net, np.ones((1, 20)) / 20.0, exact_hit_balls(10))
+
+
+# ===================================================================
+# engine surrogate
+# ===================================================================
+def test_surrogate_cost_tracks_drift_and_capacity():
+    """The refresh gate's contract: identical demand → identical cost,
+    drifted demand → a different cost, more capacity → lower cost."""
+    cat = catalog_api.embedding_catalog(n=250, dim=6, seed=0)
+    net = topology.chain(3, [8, 8, 8], [1.0, 2.0, 4.0], 100.0)
+    lam_a = demand_api.zipf(cat, alpha=1.0, seed=1).lam
+    lam_b = demand_api.zipf(cat, alpha=1.0, seed=9).lam   # re-permuted
+    c_a = surrogate_cost(net, lam_a)
+    assert c_a == surrogate_cost(net, lam_a.copy())       # deterministic
+    assert abs(c_a - surrogate_cost(net, lam_b)) > 0.0
+    big = topology.chain(3, [32, 32, 32], [1.0, 2.0, 4.0], 100.0)
+    assert surrogate_cost(big, lam_a) < c_a
+    # cost is bounded by the repo cost (it is a per-request mean)
+    assert 0.0 < c_a < 100.0

@@ -18,7 +18,8 @@ from repro.core import demand as demand_api
 from repro.core import scenarios, topology
 from repro.core.objective import DeviceInstance, Instance
 from repro.core.placement import device_greedy, greedy, warmstart
-from repro.core.routing import STRATEGIES, RouteDecision, StrategyPlane
+from repro.core.routing import (STRATEGIES, RouteDecision, StrategyPlane,
+                                rnd_lru_serve_prob)
 from repro.launch.mesh import make_lookup_mesh
 
 FAMILIES = sorted(scenarios.GENERATORS)
@@ -251,3 +252,153 @@ def test_strategy_unknown_name_raises():
     sc = scenarios.scenario("isp", cache_budget=10, n_ingress=2, seed=0)
     with pytest.raises(ValueError, match="unknown strategy"):
         StrategyPlane(sc.net, np.zeros((10, 2)), strategy="mru")
+
+
+# ===================================================================
+# RND-LRU serving probability: clamped, explicit boundary semantics
+# ===================================================================
+def test_rnd_serve_prob_clamps_unclamped_negative_q():
+    """The pinned bugfix instance: C_a = 2 beyond θ_eff = 1 gives the
+    raw formula q = 1 − 2/1 = −1 — the clamped helper must return an
+    actual probability (0: never serves), and a *negative* slack, where
+    the old ``max(theta, 1e-300)`` division guard produced q ≈ −2e300,
+    must mean "never serves" too, not an astronomically negative number
+    compared against a uniform draw."""
+    assert rnd_lru_serve_prob(2.0, 1.0) == 0.0
+    assert rnd_lru_serve_prob(0.5, 0.0) == 0.0
+    assert rnd_lru_serve_prob(0.5, -3.0) == 0.0
+    old_formula = 1.0 - 0.5 / max(-3.0, 1e-300)
+    assert old_formula < -1e290              # what the clamp replaces
+
+
+def test_rnd_serve_prob_is_a_probability_everywhere():
+    for ca in np.linspace(0.0, 8.0, 33):
+        for th in np.linspace(-2.0, 8.0, 41):
+            q = rnd_lru_serve_prob(float(ca), float(th))
+            assert 0.0 <= q <= 1.0
+    # exact match always serves, even under an exact-hit-only threshold
+    assert rnd_lru_serve_prob(0.0, 0.0) == 1.0
+    assert rnd_lru_serve_prob(0.0, 5.0) == 1.0
+    # interior value unchanged by the clamp
+    assert rnd_lru_serve_prob(1.0, 4.0) == pytest.approx(0.75)
+
+
+def test_rnd_lru_exact_hit_threshold_zero_still_serves():
+    """θ = 0 RND-LRU is exact-hit caching: after a miss inserts the
+    object, re-requesting it must hit with probability 1 (the q → 1
+    limit at C_a = 0), not be dropped by the never-serves branch."""
+    net = topology.single_cache(4, 10.0)
+    coords = np.random.default_rng(0).normal(size=(20, 3))
+    pl = StrategyPlane(net, coords, strategy="rnd-lru", threshold=0.0,
+                       seed=0)
+    assert not pl.serve(np.array([3]), np.array([0])).hit[0]
+    for _ in range(5):                       # always, not a coin flip
+        dec = pl.serve(np.array([3]), np.array([0]))
+        assert dec.hit[0] and dec.approx_cost[0] == 0.0
+
+
+def test_rnd_lru_boundary_q_zero_falls_through_to_repo():
+    """A stored key at exactly C_a = θ is eligible but serves with
+    q = 0: the request must fall through to the repository every time
+    (never a negative-probability artifact), while a key strictly
+    inside θ serves with positive frequency."""
+    coords = np.zeros((3, 1))
+    coords[1, 0] = 1.0                       # C_a(1, 0) = 1.0 exactly
+    coords[2, 0] = 0.25                      # C_a(2, 0) = 0.25 < θ
+    net = topology.single_cache(4, 100.0)
+
+    def first_serve_hits(obj, n_trials):
+        """Fraction of fresh planes (key 0 pre-inserted) whose FIRST
+        request of ``obj`` hits — one trial per plane, because a miss
+        inserts the exact object and would hit its own copy after."""
+        hits = 0
+        for t in range(n_trials):
+            pl = StrategyPlane(net, coords, strategy="rnd-lru",
+                               threshold=1.0, seed=t)
+            pl.serve(np.array([0]), np.array([0]))   # miss-insert key 0
+            hits += int(pl.serve(np.array([obj]),
+                                 np.array([0])).hit[0])
+        return hits / n_trials
+
+    assert first_serve_hits(1, 60) == 0.0    # q = 1 − 1/1 = 0: never
+    frac = first_serve_hits(2, 400)          # q = 1 − 0.25/1 = 0.75
+    assert 0.65 < frac < 0.85
+
+
+# ===================================================================
+# strategy-plane edge cases: empty paths, zero capacity, duplicates
+# ===================================================================
+def _custom_net(H, h_repo, capacities):
+    H = np.asarray(H, np.float64)
+    return topology.CacheNetwork(
+        n_caches=H.shape[1], capacities=np.asarray(capacities, np.int64),
+        ingress=np.arange(H.shape[0]), H=H,
+        h_repo=np.asarray(h_repo, np.float64), name="edge")
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_strategy_empty_forwarding_path(strategy):
+    """An ingress whose H row is all +inf has an empty forwarding path:
+    every request must be served by the repository at h_repo, with no
+    insertions anywhere and no crash in the miss walk."""
+    net = _custom_net(H=[[np.inf, np.inf], [0.5, 1.5]],
+                      h_repo=[4.0, 6.0], capacities=[2, 2])
+    coords = np.random.default_rng(1).normal(size=(30, 3))
+    pl = StrategyPlane(net, coords, strategy=strategy, seed=2)
+    assert len(pl.paths[0]) == 0
+    rng = np.random.default_rng(5)
+    dec = pl.serve(rng.integers(0, 30, 40), np.zeros(40, np.int64))
+    assert not dec.hit.any()
+    assert np.all(dec.cost == 4.0)
+    assert np.all(pl.occupancy() == 0)       # nothing was inserted
+    # the second ingress still works normally on the same plane
+    dec2 = pl.serve(rng.integers(0, 30, 40), np.ones(40, np.int64))
+    assert np.all(dec2.cost <= 6.0 + 1e-9)
+    assert np.all(pl.occupancy() <= net.capacities)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_strategy_zero_capacity_caches(strategy):
+    """Zero-capacity caches on the path hold nothing — occupancy stays
+    0 forever and every request pays ≥ its best nonzero-cache cost."""
+    net = _custom_net(H=[[0.5, 1.0, 2.0]], h_repo=[8.0],
+                      capacities=[0, 3, 0])
+    coords = np.random.default_rng(2).normal(size=(40, 3))
+    pl = StrategyPlane(net, coords, strategy=strategy, seed=1)
+    rng = np.random.default_rng(9)
+    for _ in range(4):
+        dec = pl.serve(rng.integers(0, 40, 50), np.zeros(50, np.int64))
+        occ = pl.occupancy()
+        assert occ[0] == 0 and occ[2] == 0
+        assert occ[1] <= 3
+        assert np.all((dec.cache == -1) | (dec.cache == 1))
+    # an all-zero-capacity network degenerates to pure repo serving
+    net0 = _custom_net(H=[[0.5]], h_repo=[8.0], capacities=[0])
+    pl0 = StrategyPlane(net0, coords, strategy=strategy, seed=1)
+    dec = pl0.serve(rng.integers(0, 40, 30), np.zeros(30, np.int64))
+    assert not dec.hit.any() and np.all(dec.cost == 8.0)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_strategy_duplicate_objects_in_batch(strategy):
+    """The same object several times in one batch is served in arrival
+    order: conservation holds per request (not per distinct id), the
+    second occurrence may hit the copy the first just inserted, and
+    stored keys stay unique (LRU set semantics)."""
+    sc = scenarios.scenario("isp", cache_budget=24, placement="degree",
+                            n_ingress=2, seed=1)
+    coords = np.random.default_rng(3).normal(size=(60, 4))
+    pl = StrategyPlane(sc.net, coords, strategy=strategy, seed=4)
+    objs = np.array([7, 7, 7, 12, 12, 7, 3, 3, 3, 3])
+    ings = np.zeros(len(objs), np.int64)
+    dec = pl.serve(objs, ings)
+    assert pl.n_served == len(objs)
+    assert np.all((dec.cache >= 0) == dec.hit)
+    assert np.all(dec.cost <= sc.net.h_repo[0] + 1e-9)
+    if strategy in ("lce", "sim-lru", "rnd-lru"):
+        # first occurrence missed and inserted on-path → the repeat of
+        # an exact-duplicate request hits (rnd-lru: C_a = 0 ⇒ q = 1)
+        assert dec.hit[1] and dec.approx_cost[1] == 0.0
+    assert np.all(pl.occupancy() <= sc.net.capacities)
+    for keys in pl.contents():
+        assert len(keys) == len(set(keys.tolist()))

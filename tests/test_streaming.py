@@ -387,3 +387,115 @@ def test_stream_rate_validation():
                                       rate=0.0)])
     with pytest.raises(ValueError):
         StreamDriver(eng, [])
+
+
+# ===================================================================
+# analytic refresh gate (EngineConfig.refresh_min_gain)
+# ===================================================================
+def test_refresh_gate_skips_stationary_triggers_on_drift():
+    """The surrogate-gated control plane: under stationary demand the
+    analytic cost barely moves between snapshots, so cadence-triggered
+    refresh requests are skipped (no device solve); switching the
+    stream population to a flatter demand moves the predicted cost past
+    the gate and the background solve fires again."""
+    eng, cfg, cat = make_engine(netduel=False, refresh_min_gain=10.0)
+    drv = StreamDriver(eng, _streams(cat), max_batch=32,
+                       batch_window=2.0)
+    drv.run(300)                             # warm the observed window
+    eng.refresh_placement()                  # install + gate baseline
+    drv.refresh_every = 4                    # cadence on from here
+    st1 = drv.run(300)                       # stationary phase
+    drv.drain_refresh()
+    assert st1.refresh_skipped > 0
+    assert st1.refresh_triggered == 0
+    assert st1.refreshes_started == 0        # skipped ⇒ never started
+    assert eng.swap_count == 0               # and nothing ever swapped
+    # drift: replace the zipf population with uniform demand — the
+    # observed window flattens, the predicted cost climbs past the gate
+    drv.set_streams([StreamSpec(demand=demand_api.uniform(cat),
+                                rate=5.0, seed=99)])
+    st2 = drv.run(600)
+    drv.drain_refresh()
+    assert st2.refresh_triggered > 0
+    assert st2.refreshes_started == st2.refresh_triggered
+    assert eng.swap_count > 0                # the drift solve swapped in
+    # engine-level counters aggregate both phases
+    assert eng.stats.refresh_skipped >= st1.refresh_skipped
+    assert eng.stats.refresh_triggered == st2.refresh_triggered
+
+
+def test_refresh_gate_off_by_default():
+    """refresh_min_gain = 0 keeps the old behavior bit-for-bit: every
+    cadence request starts a solve, nothing is skipped, and no
+    surrogate is ever evaluated on the request path."""
+    eng, cfg, cat = make_engine(netduel=False)
+    assert eng.ecfg.refresh_min_gain == 0.0
+    drv = StreamDriver(eng, _streams(cat), max_batch=32,
+                       batch_window=2.0, refresh_every=4)
+    drv.run(64)
+    eng.refresh_placement()
+    st = drv.run(256)
+    drv.drain_refresh()
+    assert st.refreshes_started > 0
+    assert st.refresh_skipped == 0 and st.refresh_triggered == 0
+    assert eng._surrogate_baseline is None
+
+
+def test_refresh_gate_no_serving_cost_regression():
+    """Skipping solves must not cost serving quality: on the same
+    stationary trace, the gated engine's mean per-request cost stays
+    within 5% of the always-refresh engine's (their placements solve
+    the same converging demand window, so skipped solves were
+    redundant)."""
+    costs = {}
+    for gain in (0.0, 10.0):
+        eng, cfg, cat = make_engine(netduel=False, refresh_min_gain=gain)
+        drv = StreamDriver(eng, _streams(cat), max_batch=32,
+                           batch_window=2.0, refresh_every=4)
+        drv.run(300)
+        eng.refresh_placement()
+        drv.run(500)
+        drv.drain_refresh()
+        costs[gain] = eng.stats.mean_cost
+    assert costs[10.0] <= costs[0.0] * 1.05, \
+        f"gated serving cost {costs[10.0]:.3f} regressed vs " \
+        f"always-refresh {costs[0.0]:.3f}"
+
+
+# ===================================================================
+# bounded latency window
+# ===================================================================
+def test_latency_ring_is_bounded_with_correct_percentiles():
+    """The unbounded-list leak fix: ServeStats / DriverStats keep the
+    newest LATENCY_WINDOW batch latencies only, and the percentiles are
+    computed over exactly that window (a long run's early samples age
+    out instead of accumulating forever)."""
+    from repro.serve.engine import LATENCY_WINDOW, ServeStats
+    from repro.serve.stream import DriverStats
+
+    for stats in (ServeStats(), DriverStats()):
+        ring = stats.batch_latencies_ms
+        assert ring.maxlen == LATENCY_WINDOW
+        n_extra = 5000
+        for v in range(LATENCY_WINDOW + n_extra):   # a very long run
+            ring.append(float(v))
+        assert len(ring) == LATENCY_WINDOW          # memory stays O(1)
+        # the window holds [n_extra, LATENCY_WINDOW + n_extra): the
+        # percentiles must reflect the survivors, not the aged-out head
+        assert stats.latency_percentile(0) == float(n_extra)
+        assert stats.p50_ms == pytest.approx(
+            n_extra + (LATENCY_WINDOW - 1) / 2.0)
+        assert stats.latency_percentile(100) \
+            == float(LATENCY_WINDOW + n_extra - 1)
+        assert stats.p99_ms <= stats.latency_percentile(100)
+
+
+def test_latency_window_served_engine_appends_bounded():
+    """End to end: every served batch appends one latency sample into
+    the bounded ring (same count as before the fix on short runs)."""
+    eng, cfg, cat = make_engine(netduel=False)
+    batches = mixed_batches(cat, cfg, [16] * 6)
+    for ids, prompts in batches:
+        eng.serve(ids, prompts)
+    assert len(eng.stats.batch_latencies_ms) == 6
+    assert eng.stats.p99_ms >= eng.stats.p50_ms > 0.0
